@@ -1,0 +1,40 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+from typing import Callable, Dict, List
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "reports",
+                           "bench")
+
+
+def save_result(name: str, payload: dict):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+
+
+def csv_line(name: str, seconds_per_call: float, derived: str) -> str:
+    return f"{name},{seconds_per_call * 1e6:.1f},{derived}"
+
+
+def timed(fn: Callable, warmup: int = 0, iters: int = 1) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters
+
+
+def percentile(xs: List[float], q: float) -> float:
+    xs = sorted(xs)
+    if not xs:
+        return float("nan")
+    i = min(len(xs) - 1, int(q * (len(xs) - 1) + 0.5))
+    return xs[i]

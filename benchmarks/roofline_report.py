@@ -1,0 +1,74 @@
+"""Roofline report: renders reports/dryrun/*.json into the §Roofline
+markdown table (also consumed by EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+from common import csv_line
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "reports",
+                          "dryrun")
+
+
+def load_cells(mesh: str = "pod16x16") -> List[Dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            c = json.load(f)
+        if c.get("mesh") == mesh:
+            cells.append(c)
+    return cells
+
+
+def render_table(mesh: str = "pod16x16") -> str:
+    rows = [
+        "| arch | shape | status | compute s | memory s | collective s |"
+        " dominant | useful | MFU |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in load_cells(mesh):
+        if c["status"] == "skipped":
+            rows.append(f"| {c['arch']} | {c['shape']} | skipped "
+                        f"({c['reason'][:40]}…) | | | | | | |")
+            continue
+        if c["status"] != "ok":
+            rows.append(f"| {c['arch']} | {c['shape']} | ERROR | | | | |"
+                        f" | |")
+            continue
+        r = c["roofline"]
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | ok | {r['compute_s']:.4f} |"
+            f" {r['memory_s']:.4f} | {r['collective_s']:.4f} |"
+            f" {r['dominant']} | {r['useful_flops_ratio']:.2f} |"
+            f" {r['roofline_fraction_mfu']:.3f} |")
+    return "\n".join(rows)
+
+
+def main() -> List[str]:
+    lines = []
+    for mesh in ("pod16x16", "pod2x16x16"):
+        cells = load_cells(mesh)
+        ok = [c for c in cells if c["status"] == "ok"]
+        skipped = [c for c in cells if c["status"] == "skipped"]
+        err = [c for c in cells if c["status"] == "error"]
+        lines.append(csv_line(
+            f"dryrun[{mesh}]", 0.0,
+            f"ok={len(ok)};skipped={len(skipped)};errors={len(err)}"))
+        for c in ok:
+            r = c["roofline"]
+            lines.append(csv_line(
+                f"roofline[{c['arch']},{c['shape']},{mesh}]",
+                r["bound_s"],
+                f"dominant={r['dominant']};mfu="
+                f"{r['roofline_fraction_mfu']:.3f};"
+                f"useful={r['useful_flops_ratio']:.2f}"))
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))
+    print()
+    print(render_table())

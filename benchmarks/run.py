@@ -1,0 +1,52 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.
+
+  bench_filter_micro      paper Fig. 5–7  (filter queries, CSV+Parquet)
+  bench_projection_micro  paper Fig. 8–9  (projection queries)
+  bench_macro_tpcds       paper Fig. 3    (50-query TPC-DS CDF)
+  bench_window            paper Fig. 4    (batching-window sweep)
+  bench_mckp              paper §6.2      (optimizer overhead < 2 s)
+  bench_serving_prefix    beyond-paper    (LLM prefix-cache MQO)
+  roofline_report         assignment      (dry-run roofline terms)
+"""
+import os
+import sys
+import time
+import traceback
+
+sys.path.insert(0, os.path.dirname(__file__))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+MODULES = [
+    "bench_mckp",
+    "bench_filter_micro",
+    "bench_projection_micro",
+    "bench_window",
+    "bench_macro_tpcds",
+    "bench_serving_prefix",
+    "roofline_report",
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod_name in MODULES:
+        t0 = time.time()
+        try:
+            mod = __import__(mod_name)
+            for line in mod.main():
+                print(line, flush=True)
+            print(f"# {mod_name} done in {time.time() - t0:.1f}s",
+                  flush=True)
+        except Exception:
+            failures += 1
+            print(f"# {mod_name} FAILED:", flush=True)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

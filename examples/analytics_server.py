@@ -1,0 +1,55 @@
+"""Analytics-server scenario: the TPC-DS-analog workload batched
+through the SparkSQL-Server-style session (paper §6.2).
+
+Accumulates a window of concurrent queries, triggers the MQO, and
+executes — printing the per-query runtime-ratio distribution.
+
+    PYTHONPATH=src python examples/analytics_server.py [--window 12]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--window", type=int, default=12)
+    ap.add_argument("--scale-rows", type=int, default=80_000)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro.relational.tpcds import build_tpcds_session, tpcds_queries
+
+    sess = build_tpcds_session(scale_rows=args.scale_rows,
+                               budget_bytes=1 << 30)
+    qs = tpcds_queries(sess)
+    rng = np.random.default_rng(args.seed)
+    idx = rng.choice(len(qs), size=args.window, replace=False)
+    batch = [qs[i] for i in idx]
+    print(f"window of {args.window} queries: {sorted(idx.tolist())}")
+
+    base = sess.run_batch(batch, mqo=False)
+    opt = sess.run_batch(batch, mqo=True)
+
+    r = opt.mqo.report
+    print(f"SEs={r.n_ses} CEs={r.n_ces} selected={r.n_selected} "
+          f"weight={r.selected_weight >> 10} KiB "
+          f"optimize={r.optimize_seconds * 1e3:.0f} ms")
+    ratios = []
+    for i, (b, o) in enumerate(zip(base.results, opt.results)):
+        assert b.table.row_multiset() == o.table.row_multiset()
+        ratios.append(o.seconds / max(b.seconds, 1e-9))
+    ratios.sort()
+    print("runtime ratios (sorted):",
+          " ".join(f"{x:.2f}" for x in ratios))
+    print(f"aggregate ratio: "
+          f"{opt.total_seconds / base.total_seconds:.2f} "
+          f"({base.total_seconds:.2f}s -> {opt.total_seconds:.2f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,113 @@
+"""Budgeted in-memory cache manager for materialized covering relations.
+
+The MCKP decides *admission* offline (the paper's core departure from
+eviction-based caching literature); this manager enforces the budget at
+materialization time.  Cardinality-estimation error can make the true
+materialized size exceed the estimate — mirroring the paper (§6.3,
+footnote 6-ii) the overflow is *spilled*: the payload is moved to host
+memory (the Spark `MEMORY_AND_DISK` analog on a TPU is HBM → host DRAM
+offload) and reads become more expensive.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
+
+
+@dataclass
+class CacheEntry:
+    psi: bytes
+    payload: Any                  # device arrays (Table / KV blocks / …)
+    nbytes: int
+    est_bytes: int
+    spilled: bool = False
+    hits: int = 0
+    created_at: float = field(default_factory=time.monotonic)
+
+
+@dataclass
+class CacheStats:
+    budget: int = 0
+    used: int = 0
+    spilled_bytes: int = 0
+    admissions: int = 0
+    hits: int = 0
+    misses: int = 0
+
+    def as_dict(self) -> dict:
+        return dict(budget=self.budget, used=self.used,
+                    spilled_bytes=self.spilled_bytes,
+                    admissions=self.admissions, hits=self.hits,
+                    misses=self.misses)
+
+
+class CacheManager:
+    """Holds materialized CE outputs keyed by fingerprint ψ."""
+
+    def __init__(self, budget_bytes: int,
+                 spill_fn: Optional[Callable[[Any], Any]] = None,
+                 unspill_fn: Optional[Callable[[Any], Any]] = None):
+        self.budget = int(budget_bytes)
+        self._entries: Dict[bytes, CacheEntry] = {}
+        self._spill_fn = spill_fn
+        self._unspill_fn = unspill_fn
+        self.stats = CacheStats(budget=self.budget)
+
+    # -- admission ---------------------------------------------------------
+    def put(self, psi: bytes, payload: Any, nbytes: int,
+            est_bytes: int = 0) -> CacheEntry:
+        entry = CacheEntry(psi=psi, payload=payload, nbytes=int(nbytes),
+                           est_bytes=int(est_bytes))
+        overflow = (self.stats.used + entry.nbytes) - self.budget
+        if overflow > 0 and self._spill_fn is not None:
+            entry.payload = self._spill_fn(entry.payload)
+            entry.spilled = True
+            self.stats.spilled_bytes += entry.nbytes
+        else:
+            self.stats.used += entry.nbytes
+        self._entries[psi] = entry
+        self.stats.admissions += 1
+        return entry
+
+    # -- lookup ------------------------------------------------------------
+    def get(self, psi: bytes) -> Optional[Any]:
+        entry = self._entries.get(psi)
+        if entry is None:
+            self.stats.misses += 1
+            return None
+        entry.hits += 1
+        self.stats.hits += 1
+        if entry.spilled and self._unspill_fn is not None:
+            return self._unspill_fn(entry.payload)
+        return entry.payload
+
+    def contains(self, psi: bytes) -> bool:
+        return psi in self._entries
+
+    def entry(self, psi: bytes) -> Optional[CacheEntry]:
+        return self._entries.get(psi)
+
+    # -- maintenance ---------------------------------------------------------
+    def evict(self, psi: bytes) -> None:
+        entry = self._entries.pop(psi, None)
+        if entry is not None and not entry.spilled:
+            self.stats.used -= entry.nbytes
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self.stats.used = 0
+
+    @property
+    def used_bytes(self) -> int:
+        return self.stats.used
+
+    def report(self) -> dict:
+        return {
+            **self.stats.as_dict(),
+            "entries": [
+                dict(psi=e.psi.hex()[:12], nbytes=e.nbytes,
+                     est_bytes=e.est_bytes, spilled=e.spilled, hits=e.hits)
+                for e in self._entries.values()
+            ],
+        }

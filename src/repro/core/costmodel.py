@@ -1,0 +1,69 @@
+"""CE value / weight pricing (paper §4.2, Equations 1–3).
+
+The cost model is abstract here: a concrete :class:`CostModel` knows how
+to price the execution of a sub-tree (CPU + disk + network), the cost of
+materializing ``n`` output bytes into the cache, and the cost of reading
+them back.  ``repro.relational.stats`` supplies the SparkSQL-analog
+implementation (cardinality-estimation based); ``repro.serving`` supplies
+a FLOPs/HBM-based one for prefix caching.
+
+    C(ω_i) = Σ_j C_E(τ_j)                                     (Eq. 1)
+    C(Ω_i) = C_E(τ*_i) + C_W(|τ*_i|) + m · C_R(|τ*_i|)        (Eq. 2)
+    v(Ω_i) = C(ω_i) − C(Ω_i)                                  (Eq. 3)
+    w(Ω_i) = |τ*_i|  (bytes of the materialized output)
+"""
+from __future__ import annotations
+
+from typing import Protocol, Sequence
+
+from .covering import CoveringExpression
+from .plan import PlanNode
+
+
+class CostModel(Protocol):
+    def execution_cost(self, tree: PlanNode) -> float:
+        """C_E(τ): estimated cost of computing τ's output from scratch."""
+        ...
+
+    def output_rows(self, tree: PlanNode) -> int:
+        """Estimated output cardinality |τ| in rows (or tokens)."""
+        ...
+
+    def output_bytes(self, tree: PlanNode) -> int:
+        """Estimated materialized size of τ's output, in bytes."""
+        ...
+
+    def write_cost(self, tree: PlanNode) -> float:
+        """C_W(|τ|): cost of materializing the output into the cache."""
+        ...
+
+    def read_cost(self, tree: PlanNode) -> float:
+        """C_R(|τ|): cost of one consumer reading the cached output."""
+        ...
+
+
+def price_ce(ce: CoveringExpression, model: CostModel) -> CoveringExpression:
+    """Fill ``value`` / ``weight`` of a CE in-place (returns it too)."""
+    unshared = sum(model.execution_cost(o.node) for o in ce.se.occurrences)
+    exec_ce = model.execution_cost(ce.tree)
+    write_c = model.write_cost(ce.tree)
+    read_c = model.read_cost(ce.tree)
+    total_ce = exec_ce + write_c + ce.m * read_c
+    ce.value = unshared - total_ce
+    ce.weight = int(model.output_bytes(ce.tree))
+    ce.est_rows = int(model.output_rows(ce.tree))
+    ce.cost_detail = {
+        "C_omega": unshared,
+        "C_E_star": exec_ce,
+        "C_W": write_c,
+        "C_R": read_c,
+        "m": ce.m,
+        "C_Omega": total_ce,
+    }
+    return ce
+
+
+def price_ces(ces: Sequence[CoveringExpression], model: CostModel):
+    for ce in ces:
+        price_ce(ce, model)
+    return list(ces)

@@ -1,0 +1,95 @@
+"""Merkle-tree plan fingerprints (paper §4.1, Definitions 1–3).
+
+The fingerprint of a sub-tree is a cryptographic hash combining the
+operator identifier of the root with the fingerprints of its children
+(a modified Merkle / hash tree).  Two kinds of operator identifiers:
+
+  * **loose**  — ``ID(u) = (u.label)`` for filter / project / input
+    relation.  Different predicates or column lists therefore produce
+    the SAME fingerprint, which is what later lets a *shared operator*
+    subsume the variants (covering expression).
+  * **strict** — ``ID(u) = (u.label, u.attributes)`` for every other
+    operator (joins, unions, aggregates, sorts).  Those can only be
+    shared when syntactically equal.
+
+For commutative binary operators the child fingerprints are sorted
+before hashing so that ``A join B`` and ``B join A`` are isomorphic
+(same fingerprint), per the paper's remark under Definition 2.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Dict
+
+from .plan import PlanNode
+
+Fingerprint = bytes  # 16-byte digest (truncated sha256)
+
+_DIGEST_BYTES = 16
+
+
+def _canon(obj: object) -> bytes:
+    """Deterministic byte encoding of canonical attribute structures."""
+    if obj is None:
+        return b"\x00N"
+    if isinstance(obj, bytes):
+        return b"\x00B" + obj
+    if isinstance(obj, str):
+        return b"\x00S" + obj.encode("utf-8")
+    if isinstance(obj, bool):
+        return b"\x00b" + (b"1" if obj else b"0")
+    if isinstance(obj, int):
+        return b"\x00I" + str(obj).encode()
+    if isinstance(obj, float):
+        return b"\x00F" + repr(obj).encode()
+    if isinstance(obj, (tuple, list)):
+        return b"\x00T" + b"".join(_canon(x) for x in obj) + b"\x00t"
+    if isinstance(obj, frozenset):
+        parts = sorted(_canon(x) for x in obj)
+        return b"\x00Z" + b"".join(parts) + b"\x00z"
+    raise TypeError(f"unsupported canonical attr type: {type(obj)!r}")
+
+
+def node_id(node: PlanNode) -> bytes:
+    """Operator identifier ID(u) per Definition 1."""
+    if node.loose:
+        return _canon(node.label)
+    return _canon(node.label) + _canon(node.strict_attrs)
+
+
+def _h(data: bytes) -> Fingerprint:
+    return hashlib.sha256(data).digest()[:_DIGEST_BYTES]
+
+
+def fingerprint(node: PlanNode, memo: Dict[int, Fingerprint] | None = None) -> Fingerprint:
+    """F(τ) per Definition 2 (iterative post-order to avoid recursion limits)."""
+    if memo is None:
+        memo = {}
+    stack = [(node, False)]
+    while stack:
+        cur, expanded = stack.pop()
+        if id(cur) in memo:
+            continue
+        if not expanded:
+            stack.append((cur, True))
+            for c in cur.children:
+                if id(c) not in memo:
+                    stack.append((c, False))
+        else:
+            child_fps = [memo[id(c)] for c in cur.children]
+            if cur.commutative and len(child_fps) > 1:
+                child_fps = sorted(child_fps)
+            memo[id(cur)] = _h(node_id(cur) + b"|" + b"|".join(child_fps))
+    return memo[id(node)]
+
+
+def all_fingerprints(node: PlanNode) -> Dict[int, Fingerprint]:
+    """Fingerprints of every sub-tree of ``node``, keyed by ``id(sub)``."""
+    memo: Dict[int, Fingerprint] = {}
+    fingerprint(node, memo)
+    return memo
+
+
+def fingerprint_set(node: PlanNode) -> frozenset:
+    """The set of fingerprints of all sub-trees (used for CE disjointness)."""
+    return frozenset(all_fingerprints(node).values())

@@ -1,0 +1,114 @@
+"""End-to-end multi-query optimizer (the paper's four phases, §4).
+
+    input set ──identify SEs──▶ build CEs ──price──▶ Algorithm 2 groups
+       ──MCKP(budget)──▶ selected sharing plans ──rewrite──▶ output set
+
+Generic over the plan type: the caller supplies a cost model, a
+rewriter, and (optionally) a CE validator — e.g. the relational layer
+rejects CEs whose member variants cannot be re-extracted through a
+non-commuting operator.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence
+
+from .candidates import generate_knapsack_items
+from .costmodel import CostModel, price_ces
+from .covering import CoveringExpression, build_covering_expressions
+from .identify import identify_similar_subexpressions
+from .mckp import MCKPSolution, solve_mckp
+from .plan import PlanNode
+from .rewrite import RewrittenBatch, Rewriter, rewrite_batch
+
+
+@dataclass
+class MQOReport:
+    n_queries: int = 0
+    n_ses: int = 0
+    n_ces: int = 0
+    n_valid_ces: int = 0
+    n_items: int = 0
+    n_selected: int = 0
+    selected_value: float = 0.0
+    selected_weight: int = 0
+    budget: int = 0
+    optimize_seconds: float = 0.0
+    details: dict = field(default_factory=dict)
+
+
+@dataclass
+class OptimizedBatch:
+    rewritten: RewrittenBatch
+    solution: MCKPSolution
+    report: MQOReport
+
+
+class MultiQueryOptimizer:
+    def __init__(
+        self,
+        cost_model: CostModel,
+        rewriter: Rewriter,
+        *,
+        budget_bytes: int,
+        k: int = 2,
+        ce_transform: Optional[
+            Callable[[CoveringExpression], Optional[CoveringExpression]]
+        ] = None,
+        max_compound_size: int = 4,
+        chain_cache_plans: bool = True,
+    ):
+        self.cost_model = cost_model
+        self.rewriter = rewriter
+        self.budget = int(budget_bytes)
+        self.k = k
+        self.ce_transform = ce_transform
+        self.max_compound_size = max_compound_size
+        self.chain_cache_plans = chain_cache_plans
+
+    def optimize(self, plans: Sequence[PlanNode]) -> OptimizedBatch:
+        t0 = time.perf_counter()
+        report = MQOReport(n_queries=len(plans), budget=self.budget)
+
+        # Phase 1: similar subexpression identification (Algorithm 1).
+        ses = identify_similar_subexpressions(plans, k=self.k)
+        report.n_ses = len(ses)
+
+        # Phase 2a: covering expressions (+ plan-type specific transform:
+        # extractability validation, projection augmentation, ...).
+        ces = build_covering_expressions(ses)
+        report.n_ces = len(ces)
+        if self.ce_transform is not None:
+            ces = [t for t in (self.ce_transform(ce) for ce in ces)
+                   if t is not None]
+        report.n_valid_ces = len(ces)
+
+        # Phase 2b: pricing (Eq. 1–3) + Algorithm 2 candidate groups.
+        price_ces(ces, self.cost_model)
+        items = generate_knapsack_items(
+            ces, max_compound_size=self.max_compound_size)
+        report.n_items = len(items)
+
+        # Phase 3: sharing-plan selection (MCKP, Eq. 5).
+        solution = solve_mckp(items, self.budget)
+        selected: List[CoveringExpression] = solution.ces
+        report.n_selected = len(selected)
+        report.selected_value = solution.total_value
+        report.selected_weight = solution.total_weight
+
+        # Phase 4: query rewriting.
+        rewritten = rewrite_batch(
+            plans, selected, self.rewriter,
+            chain_cache_plans=self.chain_cache_plans)
+
+        report.optimize_seconds = time.perf_counter() - t0
+        report.details = {
+            "ces": [
+                {"label": ce.tree.label, "value": ce.value,
+                 "weight": ce.weight, **ce.cost_detail}
+                for ce in ces
+            ],
+        }
+        return OptimizedBatch(rewritten=rewritten, solution=solution,
+                              report=report)

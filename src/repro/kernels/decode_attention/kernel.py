@@ -1,0 +1,115 @@
+"""Flash-decode: single-token GQA attention over a (paged) KV cache.
+
+Decode is memory-bound (one query token vs an S-long cache), so the
+kernel streams K/V blocks HBM → VMEM once and keeps all ``group`` query
+heads of a kv-head resident, amortizing each K/V byte across the GQA
+group — the TPU-native adaptation of flash-decode.  Grid
+(B, Hkv, S/Bk) with the cache dim sequential; online-softmax scratch
+(m, l, acc) sized (group, ·); live-length masking via a scalar
+prefetch-style (1,) block carrying kv_len[b].
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_body(block_k: int, n_kv_blocks: int, group: int, scale: float,
+                 window: Optional[int],
+                 len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                 acc_ref):
+    jk = pl.program_id(2)
+
+    @pl.when(jk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_len = len_ref[0]
+    k0 = jk * block_k
+
+    run = k0 < kv_len
+    if window is not None:
+        run = jnp.logical_and(run, k0 + block_k > kv_len - window)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)              # (G, D)
+        k = k_ref[0, 0].astype(jnp.float32)           # (Bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)           # (Bk, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (G, Bk)
+        cols = k0 + jax.lax.broadcasted_iota(jnp.int32,
+                                             (q.shape[0], block_k), 1)
+        mask = cols < kv_len
+        if window is not None:
+            mask &= cols >= kv_len - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1,
+                                                  keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(jk == n_kv_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("sm_scale", "window", "block_k", "interpret"))
+def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     kv_len: jnp.ndarray, *,
+                     sm_scale: Optional[float] = None,
+                     window: Optional[int] = None, block_k: int = 128,
+                     interpret: bool = False) -> jnp.ndarray:
+    """q: (B, Hq, D); k, v: (B, Hkv, S, D); kv_len: (B,) live lengths."""
+    b, hq, d = q.shape
+    hkv, s = k.shape[1], k.shape[2]
+    assert hq % hkv == 0 and s % block_k == 0
+    group = hq // hkv
+    scale = sm_scale if sm_scale is not None else 1.0 / (d ** 0.5)
+    n_kv_blocks = s // block_k
+    grid = (b, hkv, n_kv_blocks)
+
+    kernel = functools.partial(_decode_body, block_k, n_kv_blocks, group,
+                               scale, window)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b_, h, j: (b_,)),            # kv_len
+            pl.BlockSpec((1, group, d), lambda b_, h, j: (b_, h, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h, j: (b_, h, j, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h, j: (b_, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, group, d), lambda b_, h, j: (b_, h, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(kv_len.astype(jnp.int32), q, k, v)

@@ -1,0 +1,21 @@
+"""Public jit'd wrapper for flash-decode (no VJP needed — inference)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import decode_attention
+from .ref import decode_ref
+
+
+def decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+           kv_len: jnp.ndarray, *, sm_scale: Optional[float] = None,
+           window: Optional[int] = None,
+           impl: str = "pallas") -> jnp.ndarray:
+    if impl == "pallas":
+        return decode_attention(
+            q, k, v, kv_len, sm_scale=sm_scale, window=window,
+            interpret=jax.default_backend() != "tpu")
+    return decode_ref(q, k, v, kv_len, sm_scale=sm_scale, window=window)

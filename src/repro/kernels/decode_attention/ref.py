@@ -1,0 +1,2 @@
+"""Pure-jnp oracle for flash-decode: re-exports the decode reference."""
+from ..flash_attention.ref import decode_ref  # noqa: F401

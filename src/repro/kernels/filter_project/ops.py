@@ -1,0 +1,82 @@
+"""Jit'd public wrappers for the fused filter-scan kernel.
+
+``compile_predicate`` lowers a relational Expr into the kernel's static
+postfix program, so the relational engine can execute covering-
+expression predicates through the Pallas path (``use_pallas=True`` in
+the engine; interpret mode on CPU, compiled on TPU).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ...relational import expr as E
+from .kernel import DEFAULT_BLOCK, filter_scan, parse_i32
+from .ref import PredProgram, filter_scan_ref
+
+_OPMAP = {"<": "lt", "<=": "le", ">": "gt", ">=": "ge", "==": "eq",
+          "!=": "ne"}
+
+
+def compile_predicate(pred: E.Expr, col_names: Sequence[str]
+                      ) -> PredProgram:
+    """Relational Expr -> static postfix program over numeric columns."""
+    idx = {n: i for i, n in enumerate(col_names)}
+    prog: List[tuple] = []
+
+    def walk(e: E.Expr):
+        if isinstance(e, E.Cmp):
+            if isinstance(e.rhs, E.Col):
+                raise ValueError("col-col compare unsupported in kernel")
+            v = e.rhs.value
+            if isinstance(v, (bytes, str)):
+                raise ValueError("string predicates unsupported in kernel")
+            prog.append((_OPMAP[e.op], idx[e.col.name], v))
+        elif isinstance(e, E.And):
+            walk(e.parts[0])
+            for p in e.parts[1:]:
+                walk(p)
+                prog.append(("and",))
+        elif isinstance(e, E.Or):
+            walk(e.parts[0])
+            for p in e.parts[1:]:
+                walk(p)
+                prog.append(("or",))
+        elif isinstance(e, E.Not):
+            walk(e.part)
+            prog.append(("not",))
+        else:
+            raise ValueError(type(e))
+
+    walk(pred)
+    return tuple(prog)
+
+
+def kernel_supports(pred: E.Expr) -> bool:
+    try:
+        compile_predicate(pred, list(E.columns_of(pred)))
+        return True
+    except ValueError:
+        return False
+
+
+def filter_mask(columns: Tuple[jnp.ndarray, ...], program: PredProgram,
+                nrows: int, *, block: int = DEFAULT_BLOCK,
+                use_pallas: bool = True, interpret: bool | None = None):
+    """mask+counts via the kernel (padding columns to a block multiple)."""
+    n = columns[0].shape[0]
+    padded_n = ((n + block - 1) // block) * block
+    if padded_n != n:
+        columns = tuple(
+            jnp.pad(c, ((0, padded_n - n),) + ((0, 0),) * (c.ndim - 1))
+            for c in columns)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if use_pallas:
+        mask, counts = filter_scan(columns, program, nrows, block=block,
+                                   interpret=interpret)
+    else:
+        mask, counts = filter_scan_ref(columns, program, nrows, block)
+    return mask[:n], counts

@@ -1,0 +1,59 @@
+"""Pure-jnp oracle for the fused filter/parse scan kernel."""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax.numpy as jnp
+
+# Predicate program IR (static): postfix ops over a stack.
+#   ("lt"|"le"|"gt"|"ge"|"eq"|"ne", col_idx, const)  -> push col OP const
+#   ("and",) / ("or",)                               -> pop 2, push
+#   ("not",)                                         -> pop 1, push
+PredProgram = Tuple[tuple, ...]
+
+_CMP = {
+    "lt": lambda a, b: a < b, "le": lambda a, b: a <= b,
+    "gt": lambda a, b: a > b, "ge": lambda a, b: a >= b,
+    "eq": lambda a, b: a == b, "ne": lambda a, b: a != b,
+}
+
+
+def eval_program(program: PredProgram, cols: Sequence[jnp.ndarray]
+                 ) -> jnp.ndarray:
+    stack = []
+    for op in program:
+        if op[0] in _CMP:
+            _, idx, const = op
+            c = cols[idx]
+            stack.append(_CMP[op[0]](c, jnp.asarray(const, c.dtype)))
+        elif op[0] == "and":
+            b, a = stack.pop(), stack.pop()
+            stack.append(a & b)
+        elif op[0] == "or":
+            b, a = stack.pop(), stack.pop()
+            stack.append(a | b)
+        elif op[0] == "not":
+            stack.append(~stack.pop())
+        else:
+            raise ValueError(op)
+    (mask,) = stack
+    return mask
+
+
+def filter_scan_ref(columns: Sequence[jnp.ndarray], program: PredProgram,
+                    nrows: int | jnp.ndarray, block: int = 1024
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (mask bool (N,), per-block selected counts (N//block,))."""
+    n = columns[0].shape[0]
+    mask = eval_program(program, columns)
+    mask = mask & (jnp.arange(n) < nrows)
+    counts = jnp.sum(mask.reshape(n // block, block).astype(jnp.int32),
+                     axis=1)
+    return mask, counts
+
+
+def parse_i32_ref(digits: jnp.ndarray) -> jnp.ndarray:
+    """(n, 10) uint8 zero-padded decimal digits -> int32 (oracle)."""
+    pows = jnp.asarray([10**k for k in range(9, -1, -1)], jnp.int32)
+    return jnp.einsum("nd,d->n", digits.astype(jnp.int32) - 48, pows,
+                      preferred_element_type=jnp.int32)

@@ -1,0 +1,130 @@
+"""Blocked causal/sliding-window GQA flash attention (Pallas, TPU).
+
+Canonical TPU tiling: grid (B, Hq, T/Bq, S/Bk) with the key/value block
+dimension sequential ("arbitrary"), online-softmax state (m, l, acc)
+carried in VMEM scratch across kv steps, output written on the last kv
+step.  Q tiles are (Bq, D); K/V tiles (Bk, D) are selected per kv-head
+(GQA: q-head h reads kv-head h // group).  MXU work: the two
+(Bq, D) x (D, Bk) / (Bq, Bk) x (Bk, D) contractions per step — block
+sizes default to 128 so every matmul dim is MXU-aligned.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_body(block_q: int, block_k: int, n_kv_blocks: int, group: int,
+             causal: bool, window: Optional[int], scale: float,
+             t_total: int, s_total: int,
+             q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref):
+    iq = pl.program_id(2)
+    jk = pl.program_id(3)
+
+    @pl.when(jk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q0 = iq * block_q + (s_total - t_total)  # global key-offset of row 0
+    k0 = jk * block_k
+
+    # skip kv blocks that are entirely masked out
+    run = True
+    if causal:
+        run = k0 <= q0 + block_q - 1
+    if window is not None:
+        run = jnp.logical_and(run, k0 + block_k > q0 - window + 1)
+
+    @pl.when(run if not isinstance(run, bool) else jnp.bool_(run))
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)           # (Bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)           # (Bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)           # (Bk, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (Bq, Bk)
+
+        rows = q0 + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k),
+                                             0)
+        cols = k0 + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k),
+                                             1)
+        mask = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            mask &= rows >= cols
+        if window is not None:
+            mask &= cols > rows - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                            # (Bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                         # (Bq, Bk)
+        p = jnp.where(mask, p, 0.0)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1,
+                                                  keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(jk == n_kv_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "sm_scale", "block_q", "block_k",
+                     "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    sm_scale: Optional[float] = None, block_q: int = 128,
+                    block_k: int = 128,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q: (B, Hq, T, D); k, v: (B, Hkv, S, D); returns (B, Hq, T, D)."""
+    b, hq, t, d = q.shape
+    hkv, s = k.shape[1], k.shape[2]
+    assert hq % hkv == 0 and t % block_q == 0 and s % block_k == 0
+    group = hq // hkv
+    scale = sm_scale if sm_scale is not None else 1.0 / (d ** 0.5)
+    n_kv_blocks = s // block_k
+    grid = (b, hq, t // block_q, n_kv_blocks)
+
+    kernel = functools.partial(
+        _fa_body, block_q, block_k, n_kv_blocks, group, causal, window,
+        scale, t, s)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda b_, h, i, j: (b_, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h, i, j: (b_, h // group, j, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h, i, j: (b_, h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda b_, h, i, j: (b_, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running denom l
+            pltpu.VMEM((block_q, d), jnp.float32),   # accumulator
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

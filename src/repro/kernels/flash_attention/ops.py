@@ -1,0 +1,53 @@
+"""Public jit'd wrappers for flash attention.
+
+``attention`` dispatches between the Pallas kernel (TPU target;
+interpret-mode on CPU) and the pure-XLA reference, and carries a
+custom VJP: forward through the kernel, backward via the reference
+recompute (flash backward kernels are a follow-up; the VJP keeps the
+kernel usable inside ``train_step`` either way).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention
+from .ref import mha_ref
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(3, 4, 5, 6))
+def attention(q, k, v, causal: bool = True, window: Optional[int] = None,
+              sm_scale: Optional[float] = None, impl: str = "pallas"):
+    if impl == "pallas":
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               sm_scale=sm_scale,
+                               interpret=_use_interpret())
+    return mha_ref(q, k, v, causal=causal, window=window,
+                   sm_scale=sm_scale)
+
+
+def _fwd(q, k, v, causal, window, sm_scale, impl):
+    out = attention(q, k, v, causal, window, sm_scale, impl)
+    return out, (q, k, v)
+
+
+def _bwd(causal, window, sm_scale, impl, res, g):
+    q, k, v = res
+
+    def f(q_, k_, v_):
+        return mha_ref(q_, k_, v_, causal=causal, window=window,
+                       sm_scale=sm_scale)
+
+    _, vjp = jax.vjp(f, q, k, v)
+    return vjp(g)
+
+
+attention.defvjp(_fwd, _bwd)

@@ -1,0 +1,70 @@
+"""Pure-jnp oracle for blocked (flash) attention."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def mha_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+            causal: bool = True, window: Optional[int] = None,
+            sm_scale: Optional[float] = None) -> jnp.ndarray:
+    """Reference attention.
+
+    q: (B, Hq, T, D); k, v: (B, Hkv, S, D); GQA via head repetition.
+    window: sliding-window size (a query attends to keys in
+    (qi - window, qi]); None = full.
+    """
+    b, hq, t, d = q.shape
+    hkv, s = k.shape[1], k.shape[2]
+    g = hq // hkv
+    if g > 1:
+        k = jnp.repeat(k, g, axis=1)
+        v = jnp.repeat(v, g, axis=1)
+    scale = sm_scale if sm_scale is not None else 1.0 / (d ** 0.5)
+    logits = jnp.einsum("bhtd,bhsd->bhts", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qi = jnp.arange(t)[:, None]
+    ki = jnp.arange(s)[None, :]
+    mask = jnp.ones((t, s), jnp.bool_)
+    if causal:
+        offset = s - t  # decode-style: last t queries of an s-long ctx
+        mask &= (qi + offset) >= ki
+    if window is not None:
+        offset = s - t
+        mask &= ki > (qi + offset - window)
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jnp.exp(logits - logits.max(-1, keepdims=True))
+    probs = jnp.where(jnp.isfinite(logits), probs, 0.0)
+    out = jnp.einsum("bhts,bhsd->bhtd", probs, v.astype(jnp.float32))
+    denom = probs.sum(-1, keepdims=True)
+    return (out / jnp.maximum(denom, 1e-30)).astype(q.dtype)
+
+
+def decode_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+               kv_len: jnp.ndarray, *, sm_scale: Optional[float] = None,
+               window: Optional[int] = None) -> jnp.ndarray:
+    """Single-token decode oracle.
+
+    q: (B, Hq, D); k, v: (B, Hkv, S, D) padded caches; kv_len: (B,)
+    live lengths (the new token's KV already appended).
+    """
+    b, hq, d = q.shape
+    hkv, s = k.shape[1], k.shape[2]
+    g = hq // hkv
+    if g > 1:
+        k = jnp.repeat(k, g, axis=1)
+        v = jnp.repeat(v, g, axis=1)
+    scale = sm_scale if sm_scale is not None else 1.0 / (d ** 0.5)
+    logits = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    ki = jnp.arange(s)[None, None, :]
+    mask = ki < kv_len[:, None, None]
+    if window is not None:
+        mask &= ki >= (kv_len[:, None, None] - window)
+    logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jnp.exp(logits - logits.max(-1, keepdims=True))
+    probs = jnp.where(jnp.isfinite(logits), probs, 0.0)
+    out = jnp.einsum("bhs,bhsd->bhd", probs, v.astype(jnp.float32))
+    denom = probs.sum(-1, keepdims=True)
+    return (out / jnp.maximum(denom, 1e-30)).astype(q.dtype)

@@ -1,0 +1,3 @@
+# NOTE: do not import dryrun here — it mutates XLA_FLAGS on import and
+# must only be imported as the entry module of a dedicated process.
+from .mesh import data_axes, make_production_mesh, make_test_mesh

@@ -1,0 +1,377 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST set the placeholder device count before ANY other import — jax
+locks the device count on first initialization.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+# ruff: noqa: E402
+import argparse
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config, list_configs
+from ..models.config import ArchConfig
+from ..models.decoder import init_cache
+from ..models.model import (SHAPES, ShapeCell, decode_step, forward,
+                            get_shape, input_specs, loss_fn, model_specs)
+from ..models.common import abstract_params
+from ..train.optimizer import OptConfig
+from ..train.train_step import make_train_step
+from .mesh import make_production_mesh
+from .roofline import (collective_bytes_from_hlo, roofline_terms,
+                       summarize_memory)
+from .sharding import (batch_shardings, cache_shardings, opt_state_shardings,
+                       param_shardings)
+
+REPORT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                          "reports", "dryrun")
+
+# long_500k needs sub-quadratic attention; skip for pure full-attention
+# archs (documented in DESIGN.md §Arch-applicability)
+LONG_OK = {"falcon-mamba-7b", "recurrentgemma-9b", "gemma3-1b",
+           "gemma3-12b"}
+
+
+def cell_is_skipped(arch: str, shape: str) -> Optional[str]:
+    if shape == "long_500k" and arch not in LONG_OK:
+        return "long_500k skipped: pure full-attention arch (quadratic)"
+    return None
+
+
+def _abstract_opt_state(aparams):
+    f32 = lambda a: jax.ShapeDtypeStruct(a.shape, jnp.float32)
+    return {"m": jax.tree.map(f32, aparams),
+            "v": jax.tree.map(f32, aparams),
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def _scan_body_probe(cfg: ArchConfig, cell: ShapeCell, mesh) -> dict:
+    """Per-trip cost of the scanned pattern body.
+
+    XLA's HloCostAnalysis counts a while-loop body ONCE regardless of
+    trip count (verified empirically), so the full-module numbers
+    undercount the (full_repeats - 1) remaining trips.  This probe
+    lowers one pattern application (and its VJP for train cells) with
+    the same shardings and returns the per-trip flops/bytes/collective
+    bytes to add back.  (The time-axis lax.scan inside Mamba/RG-LRU
+    bodies is elementwise-dominated and left uncorrected; noted in
+    EXPERIMENTS.md.)
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from ..models.decoder import (_block_decode, _kind_cache,
+                                  block_forward, block_specs)
+
+    if cfg.full_repeats <= 1:
+        return {"flops": 0.0, "bytes": 0.0, "coll": 0.0, "trips": 1}
+
+    body_specs = {str(p): block_specs(cfg, kind, cfg.ffn_kind)
+                  for p, kind in enumerate(cfg.pattern)}
+    ab_params = abstract_params(body_specs)
+    p_sh = param_shardings(body_specs, cfg, mesh)
+    b, t = cell.global_batch, cell.seq_len
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    x_spec = P(batch_axes) if b > 1 else P()
+    dt = jnp.dtype(cfg.dtype)
+
+    if cell.step == "decode":
+        ax = jax.ShapeDtypeStruct((b, 1, cfg.d_model), dt)
+        acache = jax.eval_shape(
+            lambda: {str(p): _kind_cache(cfg, kind, b, t, dt)
+                     for p, kind in enumerate(cfg.pattern)})
+        c_sh = cache_shardings(cfg, cell, mesh, acache)
+
+        def body(lp, cache, x):
+            ncs = {}
+            for p_i, kind in enumerate(cfg.pattern):
+                x, nc = _block_decode(lp[str(p_i)], x, cache[str(p_i)],
+                                      jnp.int32(1), cfg, kind,
+                                      cfg.ffn_kind, dt)
+                ncs[str(p_i)] = nc
+            return x, ncs
+
+        fn = jax.jit(body, in_shardings=(p_sh, c_sh,
+                                         NamedSharding(mesh, x_spec)))
+        compiled = fn.lower(ab_params, acache, ax).compile()
+        cost = compiled.cost_analysis() or {}
+        coll = collective_bytes_from_hlo(compiled.as_text())["total"]
+        return {"flops": cost.get("flops", 0.0),
+                "bytes": cost.get("bytes accessed", 0.0),
+                "coll": coll, "trips": cfg.full_repeats}
+
+    ax = jax.ShapeDtypeStruct((b, t, cfg.d_model), dt)
+    positions = jnp.arange(t, dtype=jnp.int32)
+
+    def fwd(lp, x):
+        for p_i, kind in enumerate(cfg.pattern):
+            x = block_forward(lp[str(p_i)], x, cfg, kind, cfg.ffn_kind,
+                              positions, dt)
+        return x
+
+    x_sh = NamedSharding(mesh, x_spec)
+    fwd_c = jax.jit(fwd, in_shardings=(p_sh, x_sh)).lower(
+        ab_params, ax).compile()
+    cost_f = fwd_c.cost_analysis() or {}
+    coll_f = collective_bytes_from_hlo(fwd_c.as_text())["total"]
+    flops = cost_f.get("flops", 0.0)
+    bytes_ = cost_f.get("bytes accessed", 0.0)
+    coll = coll_f
+
+    if cell.step == "train":
+        def vjp_body(lp, x, ct):
+            _, pull = jax.vjp(fwd, lp, x)
+            return pull(ct)
+
+        vjp_c = jax.jit(vjp_body, in_shardings=(p_sh, x_sh, x_sh)).lower(
+            ab_params, ax, ax).compile()
+        cost_b = vjp_c.cost_analysis() or {}
+        # with remat the loop executes fwd (1) + recompute-fwd + bwd
+        # (vjp probe) per trip; without remat, just the vjp probe.
+        if cfg.remat in ("block", "full"):
+            flops += cost_b.get("flops", 0.0)
+            bytes_ += cost_b.get("bytes accessed", 0.0)
+            coll += collective_bytes_from_hlo(vjp_c.as_text())["total"]
+        else:
+            flops = cost_b.get("flops", 0.0)
+            bytes_ = cost_b.get("bytes accessed", 0.0)
+            coll = collective_bytes_from_hlo(vjp_c.as_text())["total"]
+    return {"flops": flops, "bytes": bytes_, "coll": coll,
+            "trips": cfg.full_repeats}
+
+
+def lower_cell(cfg: ArchConfig, cell: ShapeCell, mesh,
+               logits_sharded: bool = False,
+               kv_seq_model: bool = False):
+    """Build (fn, abstract args, in_shardings) for one cell."""
+    specs = model_specs(cfg)
+    aparams = abstract_params(specs)
+    p_sh = param_shardings(specs, cfg, mesh)
+
+    if cell.step == "train":
+        abatch = input_specs(cfg, cell)
+        b_sh = batch_shardings(cfg, cell, mesh, abatch)
+        aopt = _abstract_opt_state(aparams)
+        o_sh = opt_state_shardings(p_sh, mesh)
+        step = make_train_step(cfg, OptConfig())
+        fn = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                     donate_argnums=(0, 1))
+        return fn, (aparams, aopt, abatch)
+
+    if cell.step == "prefill":
+        abatch = input_specs(cfg, cell)
+        b_sh = batch_shardings(cfg, cell, mesh, abatch)
+
+        def prefill(params, batch):
+            return forward(params, batch["tokens"], cfg,
+                           batch.get("prefix_embeds"))
+
+        fn = jax.jit(prefill, in_shardings=(p_sh, b_sh))
+        return fn, (aparams, abatch)
+
+    # decode: one token against a seq_len-long cache
+    acache = jax.eval_shape(
+        lambda: init_cache(cfg, cell.global_batch, cell.seq_len))
+    c_sh = cache_shardings(cfg, cell, mesh, acache,
+                           kv_seq_model=kv_seq_model)
+    atoken = input_specs(cfg, cell)["token"]
+    t_sh = batch_shardings(cfg, cell, mesh, {"token": atoken})["token"]
+    cur = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def serve_step(params, cache, token, cur_len):
+        return decode_step(params, cache, token, cur_len, cfg)
+
+    out_sh = None
+    if logits_sharded:
+        # keep logits vocab-sharded on the way out: downstream sampling
+        # (argmax/top-k) runs shard-local + a tiny reduce instead of
+        # all-gathering (B, V)
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        batch_axes = tuple(a for a in ("pod", "data")
+                           if a in mesh.axis_names)
+        b = cell.global_batch
+        n_b = 1
+        for a in batch_axes:
+            n_b *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+        logit_sh = NamedSharding(
+            mesh, P(batch_axes if b % n_b == 0 and b > 1 else None,
+                    "model" if cfg.vocab_size % dict(
+                        zip(mesh.axis_names,
+                            mesh.devices.shape))["model"] == 0
+                    else None))
+        out_sh = (logit_sh, c_sh)
+
+    fn = jax.jit(serve_step,
+                 in_shardings=(p_sh, c_sh, t_sh, None),
+                 out_shardings=out_sh,
+                 donate_argnums=(1,))
+    return fn, (aparams, acache, atoken, cur)
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             save: bool = True, variant: str = "",
+             options: Optional[dict] = None) -> dict:
+    """options (perf-iteration knobs):
+      shard_acts: bool       — activation sharding constraints
+                               (tokens/experts/batch/vocab)
+      remat: "none"|"block"  — override activation checkpoint policy
+      capacity_factor: float — MoE expert-capacity override
+      fsdp: bool             — override ZeRO-3 param sharding
+    """
+    from contextlib import ExitStack
+    from dataclasses import replace as dc_replace
+
+    from ..models.common import activation_sharding
+
+    options = options or {}
+    cell = get_shape(shape)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    result = {"arch": arch, "shape": shape, "mesh": mesh_name,
+              "variant": variant or "baseline", "options": options,
+              "status": "ok"}
+    skip = cell_is_skipped(arch, shape)
+    if skip:
+        result["status"] = "skipped"
+        result["reason"] = skip
+        _save(result, save)
+        return result
+
+    cfg = get_config(arch)
+    if "remat" in options:
+        cfg = dc_replace(cfg, remat=options["remat"])
+    if "capacity_factor" in options:
+        cfg = dc_replace(cfg, capacity_factor=options["capacity_factor"])
+    if "fsdp" in options:
+        cfg = dc_replace(cfg, fsdp_params=options["fsdp"])
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    t0 = time.time()
+    try:
+        with ExitStack() as stack:
+            axes = {}
+            if options.get("shard_acts"):
+                axes.update(tokens=batch_axes, batch=batch_axes,
+                            vocab="model")
+                if options["shard_acts"] != "tokens":
+                    # "full": also pin expert slots to the model axis
+                    axes["experts"] = "model"
+            if options.get("moe_ep"):
+                axes["moe_ep"] = (batch_axes, "model")
+            if axes:
+                stack.enter_context(activation_sharding(mesh, **axes))
+            fn, args = lower_cell(cfg, cell, mesh,
+                                  logits_sharded=bool(
+                                      options.get("logits_sharded")),
+                                  kv_seq_model=bool(
+                                      options.get("kv_seq_model")))
+            lowered = fn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            cost = compiled.cost_analysis() or {}
+            mem = summarize_memory(compiled)
+            hlo = compiled.as_text()
+            coll = collective_bytes_from_hlo(hlo)
+
+            # correct for while-body single-counting (see probe docstring)
+            probe = _scan_body_probe(cfg, cell, mesh)
+            extra = probe["trips"] - 1
+            flops = cost.get("flops", 0.0) + extra * probe["flops"]
+            bytes_ = (cost.get("bytes accessed", 0.0)
+                      + extra * probe["bytes"])
+            coll_total = coll["total"] + extra * probe["coll"]
+
+        total, active = cfg.param_count()
+        tokens = cell.global_batch * (1 if cell.step == "decode"
+                                      else cell.seq_len)
+        result.update({
+            "chips": n_chips,
+            "lower_seconds": round(t_lower, 1),
+            "compile_seconds": round(t_compile, 1),
+            "flops_per_device": flops,
+            "bytes_accessed_per_device": bytes_,
+            "collective_bytes_per_device": coll_total,
+            "flops_raw_hlo": cost.get("flops", 0.0),
+            "scan_body_probe": probe,
+            "collectives": coll["by_op"],
+            "collective_counts": coll.get("op_counts", {}),
+            "memory": mem,
+            "params_total": total,
+            "params_active": active,
+            "tokens_per_step": tokens,
+            "step_kind": cell.step,
+        })
+        result["roofline"] = roofline_terms(result)
+    except Exception as e:
+        result["status"] = "error"
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-2000:]
+    _save(result, save)
+    return result
+
+
+def _save(result: dict, save: bool):
+    if not save:
+        return
+    os.makedirs(REPORT_DIR, exist_ok=True)
+    name = f"{result['arch']}__{result['shape']}__{result['mesh']}"
+    if result.get("variant") and result["variant"] != "baseline":
+        name += f"__{result['variant']}"
+    with open(os.path.join(REPORT_DIR, name + ".json"), "w") as f:
+        json.dump(result, f, indent=1, default=str)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--force", action="store_true",
+                    help="re-run cells that already have a report")
+    args = ap.parse_args()
+
+    archs = list_configs() if args.arch == "all" else [args.arch]
+    shapes = [s.name for s in SHAPES] if args.shape == "all" \
+        else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "pod2x16x16" if mp else "pod16x16"
+                out = os.path.join(
+                    REPORT_DIR, f"{arch}__{shape}__{mesh_name}.json")
+                if not args.force and os.path.exists(out):
+                    with open(out) as f:
+                        prev = json.load(f)
+                    if prev.get("status") in ("ok", "skipped"):
+                        print(f"[cached ] {arch} {shape} {mesh_name}: "
+                              f"{prev['status']}")
+                        continue
+                t0 = time.time()
+                r = run_cell(arch, shape, mp)
+                dom = (r.get("roofline") or {}).get("dominant", "-")
+                print(f"[{r['status']:7s}] {arch} {shape} {mesh_name} "
+                      f"({time.time()-t0:.0f}s) dominant={dom}",
+                      flush=True)
+                if r["status"] == "error":
+                    print("   ", r["error"].splitlines()[0][:200],
+                          flush=True)
+
+
+if __name__ == "__main__":
+    main()

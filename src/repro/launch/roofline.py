@@ -1,0 +1,137 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh) cell, in seconds:
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+    memory     = HLO_bytes_per_device / HBM_bw_per_chip
+    collective = collective_bytes_per_device / ICI_link_bw
+
+cost_analysis() of an SPMD-partitioned module reports PER-DEVICE
+flops/bytes (the module is one replica's program), so no extra /chips.
+collective_bytes is parsed from the optimized HLO: the summed operand
+sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops (per-device local shapes, post-partitioning).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter",
+                "all-to-all", "collective-permute")
+
+# e.g.  %all-reduce.5 = f32[512,1024]{1,0} all-reduce(...)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of every dtype[shape] group in a result type."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict:
+    """Parse optimized HLO; returns {'total': int, 'by_op': {op: bytes}}."""
+    by_op: Dict[str, int] = {}
+    count: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        for op in _COLLECTIVES:
+            # match the op as the instruction, not inside metadata
+            marker = f" {op}("
+            if marker not in line and f" {op}-start(" not in line:
+                continue
+            lhs = line.split("=", 1)
+            if len(lhs) != 2:
+                continue
+            # result type sits between '=' and the op name
+            rhs = lhs[1]
+            idx = rhs.find(op)
+            result_type = rhs[:idx]
+            b = _shape_bytes(result_type)
+            by_op[op] = by_op.get(op, 0) + b
+            count[op] = count.get(op, 0) + 1
+            break
+    return {"total": sum(by_op.values()), "by_op": by_op,
+            "op_counts": count}
+
+
+def summarize_memory(compiled) -> Dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    if out:
+        live = (out.get("argument_size_in_bytes", 0)
+                + out.get("output_size_in_bytes", 0)
+                + out.get("temp_size_in_bytes", 0)
+                - out.get("alias_size_in_bytes", 0))
+        out["peak_bytes_per_device_est"] = live
+    return out
+
+
+def roofline_terms(cell: Dict) -> Dict:
+    """cell: a dry-run result dict (per-device quantities)."""
+    flops = float(cell.get("flops_per_device") or 0.0)
+    bytes_ = float(cell.get("bytes_accessed_per_device") or 0.0)
+    coll = float(cell.get("collective_bytes_per_device") or 0.0)
+    chips = int(cell.get("chips") or 1)
+
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_ / HBM_BW
+    t_coll = coll / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+
+    # MODEL_FLOPS = 6·N_active·D (training) / 2·N_active·D (inference)
+    n_active = float(cell.get("params_active") or 0.0)
+    tokens = float(cell.get("tokens_per_step") or 0.0)
+    mult = 6.0 if cell.get("step_kind") == "train" else 2.0
+    model_flops = mult * n_active * tokens
+    model_flops_per_dev = model_flops / max(chips, 1)
+    useful = model_flops_per_dev / flops if flops else 0.0
+
+    # roofline fraction: useful model FLOPs per device per second at
+    # the bound, over peak
+    step_time = max(bound, 1e-12)
+    mfu = model_flops_per_dev / step_time / PEAK_FLOPS
+
+    return {
+        **{k: round(v, 6) for k, v in terms.items()},
+        "dominant": dominant.replace("_s", ""),
+        "bound_s": round(bound, 6),
+        "model_flops_total": model_flops,
+        "useful_flops_ratio": round(useful, 4),
+        "roofline_fraction_mfu": round(mfu, 4),
+    }

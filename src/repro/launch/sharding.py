@@ -1,0 +1,167 @@
+"""Sharding rules: logical parameter axes -> mesh axes.
+
+Parameters carry logical axes from their ParamSpec (("embed", "ffn"),
+("experts", "embed", "ffn"), ...).  Rules map logical names to mesh
+axes per arch/cell:
+
+  * TP: heads / ffn / vocab / experts -> "model"
+  * DP: batch -> ("pod", "data")
+  * FSDP (MoE giants, cfg.fsdp_params): the weights' "embed" axis ->
+    "data" (ZeRO-3: params + optimizer state sharded; all-gathered on
+    use by the partitioner)
+  * SP (long_500k): the KV/state cache sequence dim -> "data"
+
+Every assignment is guarded by divisibility-or-large (dim >= axis
+size); an axis is used at most once per spec.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.common import ParamSpec
+from ..models.config import ArchConfig
+from ..models.model import ShapeCell
+
+
+def logical_rules(cfg: ArchConfig, mesh: Mesh) -> Dict[str, tuple]:
+    batch = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    rules: Dict[str, tuple] = {
+        "batch": batch,
+        "vocab": ("model",),
+        "heads": ("model",),
+        "ffn": ("model",),
+        "experts": ("model",),
+        "embed": ("data",) if cfg.fsdp_params else (),
+        "layers": (),
+        "seq": (),
+    }
+    return rules
+
+
+def _spec_for(shape: Tuple[int, ...], logical: Tuple[Optional[str], ...],
+              rules: Dict[str, tuple], mesh: Mesh) -> P:
+    used = set()
+    out = []
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for dim, name in zip(shape, logical):
+        axes = rules.get(name, ()) if name else ()
+        chosen = []
+        prod = 1
+        for ax in axes:
+            if ax in used or ax not in sizes:
+                continue
+            # jit argument shardings require exact divisibility (e.g.
+            # internvl2's vocab 92553 cannot shard 16-way; a production
+            # deployment would pad the vocab — we keep the assignment's
+            # exact config and replicate instead)
+            if dim % (sizes[ax] * prod) == 0:
+                chosen.append(ax)
+                used.add(ax)
+                prod *= sizes[ax]
+        if not chosen:
+            out.append(None)
+        elif len(chosen) == 1:
+            out.append(chosen[0])
+        else:
+            out.append(tuple(chosen))
+    return P(*out)
+
+
+def param_shardings(specs_tree, cfg: ArchConfig, mesh: Mesh):
+    """Pytree of NamedShardings matching the ParamSpec tree."""
+    rules = logical_rules(cfg, mesh)
+
+    def one(s: ParamSpec):
+        return NamedSharding(mesh,
+                             _spec_for(s.shape, s.logical_axes, rules,
+                                       mesh))
+
+    return jax.tree.map(one, specs_tree,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def opt_state_shardings(param_sh, step_leaf_mesh: Mesh):
+    """m/v mirror the params; the step counter is replicated."""
+    return {
+        "m": param_sh,
+        "v": param_sh,
+        "step": NamedSharding(step_leaf_mesh, P()),
+    }
+
+
+def batch_shardings(cfg: ArchConfig, cell: ShapeCell, mesh: Mesh,
+                    abstract_batch) -> dict:
+    """Inputs: shard dim 0 (batch) over (pod, data); long-context decode
+    with batch=1 falls back to replication (the cache carries SP)."""
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n_batch = int(np.prod([sizes[a] for a in batch_axes]))
+
+    def one(a):
+        if a.ndim >= 1 and a.shape[0] % n_batch == 0 and a.shape[0] > 1:
+            return NamedSharding(mesh, P(batch_axes))
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(one, abstract_batch)
+
+
+def cache_shardings(cfg: ArchConfig, cell: ShapeCell, mesh: Mesh,
+                    abstract_cache, kv_seq_model: bool = False):
+    """Decode-cache sharding, keyed on the cache-leaf names:
+
+      k/v     GQA KV (B, H, S, D)  -> batch->(pod,data), H->model;
+                                      batch=1 (long_500k) -> S->data (SP)
+      ckv,
+      k_rope  MLA latent (B, S, r) -> batch->(pod,data) or S->data (SP)
+      conv,
+      ssm     (B, d, k)            -> batch, d->model
+      h       (B, d)               -> batch, d->model
+
+    Leaves under the scanned-repeats subtree carry a leading layers dim
+    (replicated).
+    """
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n_batch = int(np.prod([sizes[a] for a in batch_axes]))
+    n_model = sizes.get("model", 1)
+    data_only = tuple(a for a in batch_axes if a == "data")
+
+    def core_spec(name: str, core: Tuple[int, ...]):
+        b_ok = core[0] % n_batch == 0 and core[0] > 1
+        batch_sp = batch_axes if b_ok else None
+        if name in ("k", "v"):                      # (B, H, S, D)
+            h_ok = core[1] % n_model == 0 and core[1] >= n_model
+            s_ok = (not b_ok) and data_only and core[2] % sizes["data"] == 0
+            if kv_seq_model and not h_ok and core[2] % n_model == 0:
+                # MQA/kv=1 archs: heads can't split — sequence-shard
+                # the cache over the model axis (distributed
+                # flash-decode; partial softmax + small reduce)
+                return (batch_sp, None, "model", None)
+            return (batch_sp, "model" if h_ok else None,
+                    data_only if s_ok else None, None)
+        if name in ("ckv", "k_rope"):               # (B, S, r)
+            s_ok = (not b_ok) and data_only and core[1] % sizes["data"] == 0
+            return (batch_sp, data_only if s_ok else None, None)
+        if name in ("conv", "ssm"):                 # (B, d, k)
+            d_ok = core[1] % n_model == 0
+            return (batch_sp, "model" if d_ok else None, None)
+        if name == "h":                             # (B, d)
+            d_ok = core[1] % n_model == 0
+            return (batch_sp, "model" if d_ok else None)
+        return tuple(None for _ in core)
+
+    def one(path, a):
+        keys = [str(getattr(p, "key", "")) for p in path]
+        name = keys[-1]
+        scanned = "scan" in keys
+        core = a.shape[1:] if scanned else a.shape
+        spec = core_spec(name, core)
+        if scanned:
+            spec = (None,) + spec
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, abstract_cache)

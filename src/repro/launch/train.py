@@ -1,0 +1,51 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> ...``
+
+Runs the fault-tolerant trainer on a (reduced or full) config.  On this
+CPU container only smoke-scale configs are runnable; full configs are
+exercised through the dry-run (``repro.launch.dryrun``).
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True,
+                    help="arch id (append -smoke for the reduced config)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--peak-lr", type=float, default=1e-3)
+    ap.add_argument("--grad-compress", action="store_true",
+                    help="bf16 gradient all-reduce with error feedback")
+    args = ap.parse_args()
+
+    from ..configs import get_config
+    from ..data.pipeline import DataConfig
+    from ..train.optimizer import OptConfig
+    from ..train.trainer import TrainerConfig, train
+
+    cfg = get_config(args.arch)
+    data_cfg = DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+        global_batch=args.global_batch,
+        n_prefix_tokens=cfg.n_prefix_tokens, d_model=cfg.d_model)
+    opt_cfg = OptConfig(peak_lr=args.peak_lr,
+                        decay_steps=max(args.steps, 10))
+    tcfg = TrainerConfig(total_steps=args.steps,
+                         ckpt_every=args.ckpt_every,
+                         ckpt_dir=args.ckpt_dir)
+    result = train(cfg, data_cfg, opt_cfg, tcfg)
+    print(f"finished at step {result.final_step}"
+          + (f" (resumed from {result.resumed_from})"
+             if result.resumed_from else ""))
+    for m in result.metrics_log[-5:]:
+        print(f"step {m['step']:5d} loss {m['loss']:.4f} "
+              f"lr {m['lr']:.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+# LM substrate: pattern-based decoder stacks covering all assigned
+# architecture families (dense/MoE/MLA/SSM/hybrid/VLM/audio).
+from .config import ArchConfig, smoke_variant
+from .model import (SHAPES, ShapeCell, decode_step, forward, get_shape,
+                    init_params, input_specs, loss_fn, model_specs)

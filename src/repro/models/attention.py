@@ -1,0 +1,209 @@
+"""Attention blocks: GQA (full / sliding-window) and MLA (DeepSeek-V2).
+
+Train/prefill paths use either the XLA reference (default — also what
+the multi-pod dry-run lowers) or the Pallas flash kernel; decode paths
+maintain KV caches.  MLA decodes in the *absorbed* form: the cache
+stores only the compressed latent (kv_lora + rope dims per token) and
+the up-projections are folded into the query/output sides — the reason
+the serving-layer MQO assigns deepseek prefixes a ~9x smaller knapsack
+weight than GQA archs.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.decode_attention.ref import decode_ref
+from ..kernels.flash_attention.ref import mha_ref
+from .common import ParamSpec, apply_rope, rmsnorm, rmsnorm_spec
+from .config import ArchConfig
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+def gqa_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    d, hd = cfg.d_model, cfg.head_dim
+    return {
+        "wq": ParamSpec((d, cfg.n_heads * hd), ("embed", "heads"), "lecun"),
+        "wk": ParamSpec((d, cfg.n_kv_heads * hd), ("embed", "heads"),
+                        "lecun"),
+        "wv": ParamSpec((d, cfg.n_kv_heads * hd), ("embed", "heads"),
+                        "lecun"),
+        "wo": ParamSpec((cfg.n_heads * hd, d), ("heads", "embed"), "lecun"),
+    }
+
+
+def _split_heads(x: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    b, t, _ = x.shape
+    return x.reshape(b, t, n_heads, -1).transpose(0, 2, 1, 3)
+
+
+def gqa_forward(p, x: jnp.ndarray, cfg: ArchConfig, *,
+                window: Optional[int], positions: jnp.ndarray,
+                dtype) -> jnp.ndarray:
+    q = _split_heads(x @ p["wq"].astype(dtype), cfg.n_heads)
+    k = _split_heads(x @ p["wk"].astype(dtype), cfg.n_kv_heads)
+    v = _split_heads(x @ p["wv"].astype(dtype), cfg.n_kv_heads)
+    q = apply_rope(q, positions[None, None, :], cfg.rope_theta)
+    k = apply_rope(k, positions[None, None, :], cfg.rope_theta)
+    if cfg.attn_impl == "pallas":
+        from ..kernels.flash_attention.ops import attention
+
+        out = attention(q, k, v, True, window, None, "pallas")
+    else:
+        out = mha_ref(q, k, v, causal=True, window=window)
+    b, h, t, hd = out.shape
+    out = out.transpose(0, 2, 1, 3).reshape(b, t, h * hd)
+    return out @ p["wo"].astype(dtype)
+
+
+def gqa_init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype
+                   ) -> Dict[str, jnp.ndarray]:
+    shape = (batch, cfg.n_kv_heads, max_len, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def gqa_decode(p, x: jnp.ndarray, cache: Dict, write_idx: jnp.ndarray,
+               cfg: ArchConfig, *, window: Optional[int], dtype,
+               rope_pos: Optional[jnp.ndarray] = None
+               ) -> Tuple[jnp.ndarray, Dict]:
+    """x: (B, 1, d); write_idx: () int32 cache slot for the new token;
+    rope_pos: absolute position (defaults to write_idx — they differ for
+    rolling sliding-window caches)."""
+    b = x.shape[0]
+    if rope_pos is None:
+        rope_pos = write_idx
+    q = _split_heads(x @ p["wq"].astype(dtype), cfg.n_heads)[:, :, 0]
+    k = _split_heads(x @ p["wk"].astype(dtype), cfg.n_kv_heads)
+    v = _split_heads(x @ p["wv"].astype(dtype), cfg.n_kv_heads)
+    pos = jnp.full((1, 1, 1), 0, jnp.int32) + rope_pos
+    q = apply_rope(q[:, :, None, :], pos, cfg.rope_theta)[:, :, 0]
+    k = apply_rope(k, pos, cfg.rope_theta)
+    new_k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, write_idx,
+                                                axis=2)
+    new_v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, write_idx,
+                                                axis=2)
+    kv_len = jnp.full((b,), write_idx + 1, jnp.int32)
+    if cfg.attn_impl == "pallas":
+        from ..kernels.decode_attention.ops import decode
+
+        out = decode(q, new_k, new_v, kv_len, window=window)
+    else:
+        out = decode_ref(q, new_k, new_v, kv_len, window=window)
+    out = out.reshape(b, 1, -1)
+    return out @ p["wo"].astype(dtype), {"k": new_k, "v": new_v}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+def mla_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    d, h = cfg.d_model, cfg.n_heads
+    r_kv, r_q = cfg.kv_lora_rank, cfg.q_lora_rank
+    nope, rope, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    specs: Dict[str, ParamSpec] = {
+        "kv_down": ParamSpec((d, r_kv + rope), ("embed", None), "lecun"),
+        "kv_norm": rmsnorm_spec(r_kv),
+        "k_up": ParamSpec((r_kv, h * nope), (None, "heads"), "lecun"),
+        "v_up": ParamSpec((r_kv, h * vd), (None, "heads"), "lecun"),
+        "wo": ParamSpec((h * vd, d), ("heads", "embed"), "lecun"),
+    }
+    if r_q:
+        specs["q_down"] = ParamSpec((d, r_q), ("embed", None), "lecun")
+        specs["q_norm"] = rmsnorm_spec(r_q)
+        specs["q_up"] = ParamSpec((r_q, h * (nope + rope)),
+                                  (None, "heads"), "lecun")
+    else:
+        specs["q_up"] = ParamSpec((d, h * (nope + rope)),
+                                  ("embed", "heads"), "lecun")
+    return specs
+
+
+def _mla_q(p, x, cfg: ArchConfig, dtype):
+    if cfg.q_lora_rank:
+        cq = rmsnorm(p["q_norm"], x @ p["q_down"].astype(dtype),
+                     cfg.norm_eps)
+        q = cq @ p["q_up"].astype(dtype)
+    else:
+        q = x @ p["q_up"].astype(dtype)
+    b, t, _ = q.shape
+    q = q.reshape(b, t, cfg.n_heads, cfg.qk_nope_dim + cfg.qk_rope_dim)
+    return q.transpose(0, 2, 1, 3)      # (B, H, T, nope+rope)
+
+
+def mla_forward(p, x: jnp.ndarray, cfg: ArchConfig, *,
+                positions: jnp.ndarray, dtype) -> jnp.ndarray:
+    b, t, d = x.shape
+    nope, rope, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q = _mla_q(p, x, cfg, dtype)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions[None, None, :], cfg.rope_theta)
+
+    ckv_full = x @ p["kv_down"].astype(dtype)          # (B, T, r+rope)
+    ckv = rmsnorm(p["kv_norm"], ckv_full[..., : cfg.kv_lora_rank],
+                  cfg.norm_eps)
+    k_rope = apply_rope(ckv_full[..., cfg.kv_lora_rank:][:, None],
+                        positions[None, None, :], cfg.rope_theta)
+    k_nope = (ckv @ p["k_up"].astype(dtype)).reshape(
+        b, t, cfg.n_heads, nope).transpose(0, 2, 1, 3)
+    v = (ckv @ p["v_up"].astype(dtype)).reshape(
+        b, t, cfg.n_heads, vd).transpose(0, 2, 1, 3)
+
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, cfg.n_heads, t, rope))],
+        axis=-1)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    sm_scale = 1.0 / ((nope + rope) ** 0.5)
+    out = mha_ref(q_full, k, v, causal=True, sm_scale=sm_scale)
+    out = out.transpose(0, 2, 1, 3).reshape(b, t, cfg.n_heads * vd)
+    return out @ p["wo"].astype(dtype)
+
+
+def mla_init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype):
+    return {
+        "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+    }
+
+
+def mla_decode(p, x: jnp.ndarray, cache: Dict, cur_len, cfg: ArchConfig,
+               *, dtype) -> Tuple[jnp.ndarray, Dict]:
+    """Absorbed MLA decode over the compressed latent cache."""
+    b = x.shape[0]
+    h = cfg.n_heads
+    nope, rope, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+
+    q = _mla_q(p, x, cfg, dtype)[:, :, 0]               # (B, H, nope+rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    pos = jnp.zeros((1, 1, 1), jnp.int32) + cur_len
+    q_rope = apply_rope(q_rope[:, :, None, :], pos,
+                        cfg.rope_theta)[:, :, 0]
+
+    ckv_full = x @ p["kv_down"].astype(dtype)           # (B, 1, r+rope)
+    ckv_new = rmsnorm(p["kv_norm"], ckv_full[..., :r], cfg.norm_eps)
+    k_rope_new = apply_rope(ckv_full[..., r:][:, None], pos,
+                            cfg.rope_theta)[:, 0]
+    new_ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache["ckv"], ckv_new, cur_len, axis=1)
+    new_krope = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], k_rope_new, cur_len, axis=1)
+
+    # absorb k_up into q: (B, H, nope) x (r, H, nope) -> (B, H, r)
+    k_up = p["k_up"].astype(dtype).reshape(r, h, nope)
+    q_lat = jnp.einsum("bhn,rhn->bhr", q_nope, k_up)
+    s = jnp.einsum("bhr,bsr->bhs", q_lat, new_ckv)
+    s += jnp.einsum("bhr,bsr->bhs", q_rope, new_krope)
+    s = s.astype(jnp.float32) / ((nope + rope) ** 0.5)
+    mask = jnp.arange(new_ckv.shape[1])[None, None] <= cur_len
+    s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1).astype(dtype)
+    ctx = jnp.einsum("bhs,bsr->bhr", w, new_ckv)        # (B, H, r)
+    v_up = p["v_up"].astype(dtype).reshape(r, h, vd)
+    out = jnp.einsum("bhr,rhv->bhv", ctx, v_up)
+    out = out.reshape(b, 1, h * vd)
+    return out @ p["wo"].astype(dtype), {"ckv": new_ckv,
+                                         "k_rope": new_krope}

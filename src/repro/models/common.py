@@ -1,0 +1,181 @@
+"""Shared LM building blocks: params-as-pytrees, RMSNorm, RoPE, CE loss.
+
+Parameters are plain dicts of arrays.  Every leaf is declared through
+``ParamSpec`` (shape, logical axes, init) so the same definition serves
+three uses: CPU smoke materialization, abstract dry-run lowering
+(ShapeDtypeStruct only), and mesh sharding (logical axes -> mesh axes
+via launch/sharding.py rules).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    logical_axes: Tuple[Optional[str], ...]   # e.g. ("embed", "ffn")
+    init: str = "normal"                      # normal|zeros|ones|lecun
+    scale: float = 1.0
+    dtype: str = "float32"
+
+    def materialize(self, key) -> jnp.ndarray:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, self.dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, self.dtype)
+        fan_in = self.shape[0] if len(self.shape) >= 1 else 1
+        if self.init == "lecun":
+            std = (1.0 / max(fan_in, 1)) ** 0.5
+        else:
+            std = 0.02
+        return (jax.random.normal(key, self.shape, jnp.float32)
+                * std * self.scale).astype(self.dtype)
+
+    def abstract(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, self.dtype)
+
+
+ParamTree = Dict
+SpecTree = Dict
+
+
+def materialize_params(specs: SpecTree, seed: int = 0) -> ParamTree:
+    leaves, treedef = jax.tree.flatten(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(jax.random.PRNGKey(seed), max(len(leaves), 1))
+    out = [spec.materialize(k) for spec, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(specs: SpecTree) -> ParamTree:
+    return jax.tree.map(lambda s: s.abstract(), specs,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+# ---------------------------------------------------------------------------
+# normalization / rope / embedding
+# ---------------------------------------------------------------------------
+def rmsnorm_spec(d: int) -> ParamSpec:
+    return ParamSpec((d,), (None,), init="ones")
+
+
+def rmsnorm(w: jnp.ndarray, x: jnp.ndarray, eps: float = 1e-6
+            ) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+            ).astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float
+               ) -> jnp.ndarray:
+    """x: (..., T, D) with D even; positions: (..., T) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., T, D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean CE over (B, T, V) logits and (B, T) int labels, f32 math.
+
+    The gold logit is extracted with a one-hot contraction rather than
+    take_along_axis: a gather across a vocab-sharded dimension forces
+    the partitioner to all-gather the logits, while the contraction
+    partitions into per-shard partial sums + a scalar-sized all-reduce.
+    """
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    onehot = (labels[..., None]
+              == jnp.arange(lf.shape[-1], dtype=labels.dtype))
+    gold = jnp.einsum("btv,btv->bt", lf,
+                      onehot.astype(jnp.float32))
+    nll = lse - gold
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+def shard_activation(x: jnp.ndarray, spec, enabled: bool) -> jnp.ndarray:
+    """with_sharding_constraint guarded for meshless (smoke) execution."""
+    if not enabled:
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    return jax.lax.with_sharding_constraint(
+        x, P(*spec) if not isinstance(spec, P) else spec)
+
+
+# ---------------------------------------------------------------------------
+# activation-sharding context (perf: constrains the SPMD partitioner)
+# ---------------------------------------------------------------------------
+import contextvars
+from contextlib import contextmanager
+
+_ACT_CTX = contextvars.ContextVar("repro_act_sharding", default=None)
+
+
+@contextmanager
+def activation_sharding(mesh, **logical_axes):
+    """Trace-time context: ``constrain(x, ("tokens", None))`` inserts
+    with_sharding_constraint(NamedSharding(mesh, P(axes["tokens"], None)))
+    — a no-op outside the context, so smoke tests and single-device
+    paths are untouched.  Set by the dry-run / launchers.
+
+    logical_axes example: tokens=("pod","data"), experts="model",
+    model="model".
+    """
+    token = _ACT_CTX.set({"mesh": mesh, "axes": logical_axes})
+    try:
+        yield
+    finally:
+        _ACT_CTX.reset(token)
+
+
+def constrain(x: jnp.ndarray, dims: Tuple[Optional[str], ...]
+              ) -> jnp.ndarray:
+    """Constrain each dim to the mesh axes bound to its logical name."""
+    ctx = _ACT_CTX.get()
+    if ctx is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    mesh = ctx["mesh"]
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    spec = []
+    used = set()
+    for dim, name in zip(x.shape, dims):
+        ax = ctx["axes"].get(name) if name else None
+        if ax is None:
+            spec.append(None)
+            continue
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        axes = tuple(a for a in axes if a in sizes and a not in used)
+        prod = 1
+        for a in axes:
+            prod *= sizes[a]
+        if axes and dim % prod == 0:
+            spec.append(axes if len(axes) > 1 else axes[0])
+            used.update(axes)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

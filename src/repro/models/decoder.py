@@ -1,0 +1,237 @@
+"""Decoder stack: pattern-based block assembly, scanned over repeats.
+
+A model is ``first_k_dense`` unrolled prefix layers + ``full_repeats``
+scanned copies of the layer ``pattern`` + unrolled remainder layers.
+Scanning keeps the HLO compact (one pattern body regardless of depth),
+which matters for 512-device dry-run compile times; remat wraps the
+scan body when cfg.remat == "block".
+
+Three entry points per stack: ``forward`` (training), ``prefill``
+(fills decode caches from a token block, used by the serving engine's
+covering prefill plans), and ``decode_step`` (single token).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as A
+from . import ffn as F
+from . import rglru as R
+from . import ssm as S
+from .common import ParamSpec, rmsnorm, rmsnorm_spec
+from .config import ArchConfig
+
+
+# ---------------------------------------------------------------------------
+# per-block specs
+# ---------------------------------------------------------------------------
+def block_specs(cfg: ArchConfig, kind: str, ffn_kind: str) -> Dict:
+    d = cfg.d_model
+    specs: Dict[str, Any] = {"norm1": rmsnorm_spec(d)}
+    if kind in ("attn", "local"):
+        specs["mix"] = A.gqa_specs(cfg)
+    elif kind == "mla":
+        specs["mix"] = A.mla_specs(cfg)
+    elif kind == "mamba":
+        specs["mix"] = S.mamba_specs(cfg)
+        return specs                       # mamba block has no MLP
+    elif kind == "rglru":
+        specs["mix"] = R.rglru_specs(cfg)
+    else:
+        raise ValueError(kind)
+    specs["norm2"] = rmsnorm_spec(d)
+    specs["ffn"] = F.ffn_specs(cfg, ffn_kind)
+    return specs
+
+
+def _stack_specs(specs, repeats: int):
+    def stack(s: ParamSpec) -> ParamSpec:
+        return ParamSpec((repeats,) + s.shape, ("layers",) + s.logical_axes,
+                         s.init, s.scale, s.dtype)
+
+    return jax.tree.map(stack, specs,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def decoder_specs(cfg: ArchConfig) -> Dict:
+    specs: Dict[str, Any] = {}
+    if cfg.first_k_dense:
+        specs["prefix"] = [block_specs(cfg, cfg.pattern[0], "dense")
+                           for _ in range(cfg.first_k_dense)]
+    if cfg.full_repeats:
+        body = {str(p): block_specs(cfg, kind, cfg.ffn_kind)
+                for p, kind in enumerate(cfg.pattern)}
+        specs["scan"] = _stack_specs(body, cfg.full_repeats)
+    if cfg.remainder_layers:
+        specs["rem"] = [
+            block_specs(cfg, cfg.pattern[i % len(cfg.pattern)],
+                        cfg.ffn_kind)
+            for i in range(cfg.remainder_layers)]
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# training / prefill-style forward
+# ---------------------------------------------------------------------------
+def _window(cfg: ArchConfig, kind: str) -> Optional[int]:
+    return cfg.window if kind == "local" else None
+
+
+def block_forward(p, x: jnp.ndarray, cfg: ArchConfig, kind: str,
+                  ffn_kind: str, positions: jnp.ndarray, dtype
+                  ) -> jnp.ndarray:
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if kind in ("attn", "local"):
+        h = A.gqa_forward(p["mix"], h, cfg, window=_window(cfg, kind),
+                          positions=positions, dtype=dtype)
+    elif kind == "mla":
+        h = A.mla_forward(p["mix"], h, cfg, positions=positions,
+                          dtype=dtype)
+    elif kind == "mamba":
+        return x + S.mamba_forward(p["mix"], h, cfg, dtype)
+    elif kind == "rglru":
+        h = R.rglru_forward(p["mix"], h, cfg, dtype)
+    x = x + h
+    h = rmsnorm(p["norm2"], x, cfg.norm_eps)
+    x = x + F.ffn_forward(p["ffn"], h, cfg, ffn_kind, dtype)
+    return x
+
+
+def decoder_forward(params, x: jnp.ndarray, cfg: ArchConfig,
+                    positions: jnp.ndarray, dtype) -> jnp.ndarray:
+    for p in params.get("prefix", []):
+        x = block_forward(p, x, cfg, cfg.pattern[0], "dense", positions,
+                          dtype)
+
+    if cfg.full_repeats:
+        def body(x, layer):
+            for p_i, kind in enumerate(cfg.pattern):
+                x = block_forward(layer[str(p_i)], x, cfg, kind,
+                                  cfg.ffn_kind, positions, dtype)
+            return x, None
+
+        if cfg.remat in ("block", "full"):
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["scan"])
+
+    for i, p in enumerate(params.get("rem", [])):
+        kind = cfg.pattern[i % len(cfg.pattern)]
+        x = block_forward(p, x, cfg, kind, cfg.ffn_kind, positions, dtype)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# decode caches
+# ---------------------------------------------------------------------------
+def _kind_cache(cfg: ArchConfig, kind: str, batch: int, max_len: int,
+                dtype):
+    if kind in ("attn", "local"):
+        # local layers only ever need a window-sized cache
+        L = max_len if kind == "attn" else min(max_len,
+                                               cfg.window or max_len)
+        return A.gqa_init_cache(cfg, batch, L, dtype)
+    if kind == "mla":
+        return A.mla_init_cache(cfg, batch, max_len, dtype)
+    if kind == "mamba":
+        return S.mamba_init_cache(cfg, batch, dtype)
+    if kind == "rglru":
+        return R.rglru_init_cache(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None
+               ) -> Dict:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    cache: Dict[str, Any] = {}
+    if cfg.first_k_dense:
+        cache["prefix"] = [
+            _kind_cache(cfg, cfg.pattern[0], batch, max_len, dtype)
+            for _ in range(cfg.first_k_dense)]
+    if cfg.full_repeats:
+        body = {str(p): _kind_cache(cfg, kind, batch, max_len, dtype)
+                for p, kind in enumerate(cfg.pattern)}
+        cache["scan"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(
+                a[None], (cfg.full_repeats,) + a.shape).copy(), body)
+    if cfg.remainder_layers:
+        cache["rem"] = [
+            _kind_cache(cfg, cfg.pattern[i % len(cfg.pattern)], batch,
+                        max_len, dtype)
+            for i in range(cfg.remainder_layers)]
+    return cache
+
+
+def _block_decode(p, x, cache, cur_len, cfg: ArchConfig, kind: str,
+                  ffn_kind: str, dtype):
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if kind in ("attn", "local"):
+        # local cache is a rolling window: write position clamps to the
+        # last slot once full (older entries roll off), while RoPE keeps
+        # using the absolute position so relative phases stay correct.
+        if kind == "local" and cfg.window is not None:
+            wlen = cache["k"].shape[2]
+            write_idx = jnp.minimum(cur_len, wlen - 1)
+
+            def roll(a):
+                return jnp.where(cur_len >= wlen,
+                                 jnp.roll(a, -1, axis=2), a)
+
+            cache = jax.tree.map(roll, cache)
+            h, new_cache = A.gqa_decode(p["mix"], h, cache, write_idx,
+                                        cfg, window=None, dtype=dtype,
+                                        rope_pos=cur_len)
+        else:
+            h, new_cache = A.gqa_decode(p["mix"], h, cache, cur_len, cfg,
+                                        window=None, dtype=dtype)
+    elif kind == "mla":
+        h, new_cache = A.mla_decode(p["mix"], h, cache, cur_len, cfg,
+                                    dtype=dtype)
+    elif kind == "mamba":
+        h, new_cache = S.mamba_decode(p["mix"], h, cache, cfg, dtype)
+        return x + h, new_cache
+    elif kind == "rglru":
+        h, new_cache = R.rglru_decode(p["mix"], h, cache, cfg, dtype)
+    x = x + h
+    h = rmsnorm(p["norm2"], x, cfg.norm_eps)
+    x = x + F.ffn_forward(p["ffn"], h, cfg, ffn_kind, dtype)
+    return x, new_cache
+
+
+def decoder_decode_step(params, cache, x: jnp.ndarray, cur_len,
+                        cfg: ArchConfig, dtype) -> Tuple[jnp.ndarray, Dict]:
+    new_cache: Dict[str, Any] = {}
+    if cfg.first_k_dense:
+        nc = []
+        for p, c in zip(params["prefix"], cache["prefix"]):
+            x, c2 = _block_decode(p, x, c, cur_len, cfg, cfg.pattern[0],
+                                  "dense", dtype)
+            nc.append(c2)
+        new_cache["prefix"] = nc
+
+    if cfg.full_repeats:
+        def body(x, xs):
+            layer, lcache = xs
+            ncs = {}
+            for p_i, kind in enumerate(cfg.pattern):
+                x, nc_ = _block_decode(layer[str(p_i)], x, lcache[str(p_i)],
+                                       cur_len, cfg, kind, cfg.ffn_kind,
+                                       dtype)
+                ncs[str(p_i)] = nc_
+            return x, ncs
+
+        x, sc = jax.lax.scan(body, x, (params["scan"], cache["scan"]))
+        new_cache["scan"] = sc
+
+    if cfg.remainder_layers:
+        nc = []
+        for i, (p, c) in enumerate(zip(params["rem"], cache["rem"])):
+            kind = cfg.pattern[i % len(cfg.pattern)]
+            x, c2 = _block_decode(p, x, c, cur_len, cfg, kind,
+                                  cfg.ffn_kind, dtype)
+            nc.append(c2)
+        new_cache["rem"] = nc
+    return x, new_cache

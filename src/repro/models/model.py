@@ -1,0 +1,141 @@
+"""Language model wrapper: embeddings, loss, train/serve step builders.
+
+``input_specs`` provides ShapeDtypeStruct stand-ins for every input of
+each (config × shape) cell — weak-type-correct, shardable, and never
+allocated — which is what the multi-pod dry-run lowers against.
+Modality frontends (VLM patches / audio frames) are STUBS per the
+assignment: precomputed (B, n_prefix, d_model) embeddings arrive as an
+input.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import (ParamSpec, cross_entropy, materialize_params,
+                     rmsnorm, rmsnorm_spec)
+from .config import ArchConfig
+from .decoder import (decoder_decode_step, decoder_forward, decoder_specs,
+                      init_cache)
+
+
+def model_specs(cfg: ArchConfig) -> Dict:
+    d = cfg.d_model
+    specs: Dict[str, Any] = {
+        "embed": ParamSpec((cfg.vocab_size, d), ("vocab", "embed"),
+                           "normal"),
+        "final_norm": rmsnorm_spec(d),
+        "layers": decoder_specs(cfg),
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = ParamSpec((d, cfg.vocab_size),
+                                     ("embed", "vocab"), "lecun")
+    return specs
+
+
+def init_params(cfg: ArchConfig, seed: int = 0):
+    return materialize_params(model_specs(cfg), seed)
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+def forward(params, tokens: jnp.ndarray, cfg: ArchConfig,
+            prefix_embeds: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """tokens: (B, T_tok) int32 -> logits (B, T, V)."""
+    from .common import constrain
+
+    dtype = jnp.dtype(cfg.dtype)
+    x = params["embed"].astype(dtype)[tokens]
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(dtype), x], axis=1)
+    x = constrain(x, ("batch", None, None))
+    t = x.shape[1]
+    positions = jnp.arange(t, dtype=jnp.int32)
+    x = decoder_forward(params["layers"], x, cfg, positions, dtype)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].astype(dtype).T
+    else:
+        logits = x @ params["unembed"].astype(dtype)
+    return constrain(logits, ("batch", None, "vocab"))
+
+
+def loss_fn(params, batch: Dict[str, jnp.ndarray], cfg: ArchConfig
+            ) -> jnp.ndarray:
+    logits = forward(params, batch["tokens"], cfg,
+                     prefix_embeds=batch.get("prefix_embeds"))
+    labels, mask = batch["labels"], batch.get("mask")
+    return cross_entropy(logits[:, : labels.shape[1]], labels, mask)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+def decode_step(params, cache, token: jnp.ndarray, cur_len, cfg: ArchConfig
+                ) -> Tuple[jnp.ndarray, Any]:
+    """token: (B, 1) int32; returns (logits (B, V), new cache)."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = params["embed"].astype(dtype)[token]
+    x, new_cache = decoder_decode_step(params["layers"], cache, x,
+                                       cur_len, cfg, dtype)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].astype(dtype).T
+    else:
+        logits = x @ params["unembed"].astype(dtype)
+    return logits[:, 0], new_cache
+
+
+# ---------------------------------------------------------------------------
+# dry-run input specs per assignment shape
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ShapeCell:
+    name: str                 # train_4k | prefill_32k | decode_32k | long_500k
+    seq_len: int
+    global_batch: int
+    step: str                 # "train" | "prefill" | "decode"
+
+
+SHAPES = (
+    ShapeCell("train_4k", 4_096, 256, "train"),
+    ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+    ShapeCell("decode_32k", 32_768, 128, "decode"),
+    ShapeCell("long_500k", 524_288, 1, "decode"),
+)
+
+
+def get_shape(name: str) -> ShapeCell:
+    for s in SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(name)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeCell) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for each input of the step function."""
+    b, t = shape.global_batch, shape.seq_len
+    if shape.step == "train":
+        n_tok = t - cfg.n_prefix_tokens
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((b, n_tok), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, t), jnp.int32),
+            "mask": jax.ShapeDtypeStruct((b, t), jnp.float32),
+        }
+        if cfg.n_prefix_tokens:
+            specs["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_prefix_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+        return specs
+    if shape.step == "prefill":
+        n_tok = t - cfg.n_prefix_tokens
+        specs = {"tokens": jax.ShapeDtypeStruct((b, n_tok), jnp.int32)}
+        if cfg.n_prefix_tokens:
+            specs["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_prefix_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+        return specs
+    # decode: one new token against a KV/state cache of length t
+    return {"token": jax.ShapeDtypeStruct((b, 1), jnp.int32)}

@@ -1,0 +1,88 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Real-Gated Linear Recurrent Unit: per-channel learned decay gated by
+the input, h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t), inside
+a gated two-branch block with a short causal conv.  Decode state is
+O(1) per layer (conv window + h).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamSpec
+from .config import ArchConfig
+from .ssm import _causal_conv
+
+_C = 8.0  # Griffin's recurrence sharpness constant
+
+
+def rglru_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    d, w = cfg.d_model, cfg.lru_width_actual
+    return {
+        "in_x": ParamSpec((d, w), ("embed", "ffn"), "lecun"),
+        "in_gate": ParamSpec((d, w), ("embed", "ffn"), "lecun"),
+        "conv_w": ParamSpec((w, cfg.d_conv), ("ffn", None), "lecun"),
+        "conv_b": ParamSpec((w,), ("ffn",), "zeros"),
+        "w_input_gate": ParamSpec((w, w), ("ffn", None), "lecun"),
+        "w_rec_gate": ParamSpec((w, w), ("ffn", None), "lecun"),
+        "lam": ParamSpec((w,), ("ffn",), "ones"),
+        "out": ParamSpec((w, d), ("ffn", "embed"), "lecun"),
+    }
+
+
+def _gates(p, xc, dtype):
+    i_t = jax.nn.sigmoid(xc @ p["w_input_gate"].astype(dtype))
+    r_t = jax.nn.sigmoid(xc @ p["w_rec_gate"].astype(dtype))
+    log_a = (-_C * jax.nn.softplus(p["lam"].astype(jnp.float32))
+             * r_t.astype(jnp.float32))
+    a_t = jnp.exp(log_a).astype(dtype)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9)
+                    ).astype(dtype)
+    return i_t, a_t, beta
+
+
+def rglru_forward(p, x: jnp.ndarray, cfg: ArchConfig, dtype
+                  ) -> jnp.ndarray:
+    xb = x @ p["in_x"].astype(dtype)                   # (B, T, w)
+    gate = jax.nn.gelu(x @ p["in_gate"].astype(dtype))
+    xc = _causal_conv(xb, p["conv_w"].astype(dtype),
+                      p["conv_b"].astype(dtype))
+    i_t, a_t, beta = _gates(p, xc, dtype)
+    gx = beta * (i_t * xc)
+
+    def step(h, inp):
+        a, b_ = inp
+        h = a * h + b_
+        return h, h
+
+    b, t, w = xc.shape
+    h0 = jnp.zeros((b, w), dtype)
+    _, hs = jax.lax.scan(step, h0,
+                         (a_t.transpose(1, 0, 2), gx.transpose(1, 0, 2)))
+    h_seq = hs.transpose(1, 0, 2)
+    return (h_seq * gate) @ p["out"].astype(dtype)
+
+
+def rglru_init_cache(cfg: ArchConfig, batch: int, dtype) -> Dict:
+    w = cfg.lru_width_actual
+    return {
+        "conv": jnp.zeros((batch, w, cfg.d_conv), dtype),
+        "h": jnp.zeros((batch, w), dtype),
+    }
+
+
+def rglru_decode(p, x: jnp.ndarray, cache: Dict, cfg: ArchConfig, dtype
+                 ) -> Tuple[jnp.ndarray, Dict]:
+    xb = (x[:, 0] @ p["in_x"].astype(dtype))           # (B, w)
+    gate = jax.nn.gelu(x[:, 0] @ p["in_gate"].astype(dtype))
+    conv = jnp.concatenate([cache["conv"][:, :, 1:], xb[:, :, None]],
+                           axis=2)
+    xc = jnp.einsum("bdk,dk->bd", conv, p["conv_w"].astype(dtype))
+    xc = xc + p["conv_b"].astype(dtype)
+    i_t, a_t, beta = _gates(p, xc, dtype)
+    h = a_t * cache["h"] + beta * (i_t * xc)
+    out = ((h * gate) @ p["out"].astype(dtype))[:, None]
+    return out, {"conv": conv, "h": h}

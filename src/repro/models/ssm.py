@@ -1,0 +1,118 @@
+"""Mamba-1 selective SSM block (falcon-mamba-7b).
+
+Time recurrence runs as a lax.scan over the sequence (compact HLO for
+the dry-run; the chunked parallel-scan kernel is a recorded follow-up
+in EXPERIMENTS.md §Perf).  Decode keeps an O(1)-size state per layer:
+(conv window, SSM state) — which is also why the serving-layer MQO
+gives SSM prefixes a near-zero knapsack weight.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamSpec
+from .config import ArchConfig
+
+
+def mamba_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    d, di, st = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    dr = cfg.dt_rank_actual
+    return {
+        "in_proj": ParamSpec((d, 2 * di), ("embed", "ffn"), "lecun"),
+        "conv_w": ParamSpec((di, cfg.d_conv), ("ffn", None), "lecun"),
+        "conv_b": ParamSpec((di,), ("ffn",), "zeros"),
+        "x_proj": ParamSpec((di, dr + 2 * st), ("ffn", None), "lecun"),
+        "dt_proj": ParamSpec((dr, di), (None, "ffn"), "lecun"),
+        "dt_bias": ParamSpec((di,), ("ffn",), "zeros"),
+        "A_log": ParamSpec((di, st), ("ffn", None), "ones"),
+        "D": ParamSpec((di,), ("ffn",), "ones"),
+        "out_proj": ParamSpec((di, d), ("ffn", "embed"), "lecun"),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray
+                 ) -> jnp.ndarray:
+    """Depthwise causal conv over time.  x: (B, T, di); w: (di, K)."""
+    di, kk = w.shape
+    xt = x.transpose(0, 2, 1)                          # (B, di, T)
+    xt = jnp.pad(xt, ((0, 0), (0, 0), (kk - 1, 0)))
+    out = jax.lax.conv_general_dilated(
+        xt, w[:, None, :],                             # (di, 1, K)
+        window_strides=(1,), padding="VALID",
+        feature_group_count=di,
+        dimension_numbers=("NCH", "OIH", "NCH"))
+    return (out + b[None, :, None]).transpose(0, 2, 1)
+
+
+def _ssm_scan(dt, Bm, Cm, x_in, A, D):
+    """dt, x_in: (B, T, di); Bm, Cm: (B, T, st); A: (di, st)."""
+    da = jnp.exp(dt[..., None] * A)                    # (B, T, di, st)
+    db_x = (dt * x_in)[..., None] * Bm[:, :, None, :]  # (B, T, di, st)
+
+    def step(h, inp):
+        da_t, dbx_t, c_t = inp
+        h = da_t * h + dbx_t
+        y = jnp.einsum("bds,bs->bd", h, c_t)
+        return h, y
+
+    b, t, di, st = da.shape
+    h0 = jnp.zeros((b, di, st), da.dtype)
+    xs = (da.transpose(1, 0, 2, 3), db_x.transpose(1, 0, 2, 3),
+          Cm.transpose(1, 0, 2))
+    _, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2)                          # (B, T, di)
+    return y + x_in * D
+
+
+def mamba_forward(p, x: jnp.ndarray, cfg: ArchConfig, dtype
+                  ) -> jnp.ndarray:
+    xz = x @ p["in_proj"].astype(dtype)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_in = jax.nn.silu(_causal_conv(x_in, p["conv_w"].astype(dtype),
+                                    p["conv_b"].astype(dtype)))
+    proj = x_in @ p["x_proj"].astype(dtype)
+    dr, st = cfg.dt_rank_actual, cfg.ssm_state
+    dt, Bm, Cm = jnp.split(proj, [dr, dr + st], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"].astype(dtype)
+                         + p["dt_bias"].astype(dtype))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32)).astype(dtype)
+    y = _ssm_scan(dt, Bm, Cm, x_in, A, p["D"].astype(dtype))
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"].astype(dtype)
+
+
+def mamba_init_cache(cfg: ArchConfig, batch: int, dtype) -> Dict:
+    di = cfg.d_inner
+    return {
+        "conv": jnp.zeros((batch, di, cfg.d_conv), dtype),
+        "ssm": jnp.zeros((batch, di, cfg.ssm_state), dtype),
+    }
+
+
+def mamba_decode(p, x: jnp.ndarray, cache: Dict, cfg: ArchConfig, dtype
+                 ) -> Tuple[jnp.ndarray, Dict]:
+    """x: (B, 1, d) -> (B, 1, d); O(1) state update."""
+    b = x.shape[0]
+    xz = x[:, 0] @ p["in_proj"].astype(dtype)
+    x_in, z = jnp.split(xz, 2, axis=-1)                # (B, di)
+
+    conv = jnp.concatenate([cache["conv"][:, :, 1:], x_in[:, :, None]],
+                           axis=2)                     # (B, di, K)
+    x_c = jnp.einsum("bdk,dk->bd", conv, p["conv_w"].astype(dtype))
+    x_c = jax.nn.silu(x_c + p["conv_b"].astype(dtype))
+
+    proj = x_c @ p["x_proj"].astype(dtype)
+    dr, st = cfg.dt_rank_actual, cfg.ssm_state
+    dt, Bm, Cm = jnp.split(proj, [dr, dr + st], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"].astype(dtype)
+                         + p["dt_bias"].astype(dtype))   # (B, di)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32)).astype(dtype)
+    da = jnp.exp(dt[..., None] * A)                      # (B, di, st)
+    h = da * cache["ssm"] + (dt * x_c)[..., None] * Bm[:, None, :]
+    y = jnp.einsum("bds,bs->bd", h, Cm) + x_c * p["D"].astype(dtype)
+    y = y * jax.nn.silu(z)
+    out = (y @ p["out_proj"].astype(dtype))[:, None]
+    return out, {"conv": conv, "ssm": h}

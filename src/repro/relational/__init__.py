@@ -1,0 +1,12 @@
+# SparkSQL-analog relational substrate: columnar tables over JAX arrays,
+# logical plans, Catalyst-like local optimization, cardinality stats,
+# eager per-operator SPMD execution, and the MQO integration.
+from . import expr, logical
+from .datagen import generate_columns, make_storage, people_schema, synthetic_schema
+from .executor import BatchResult, QueryResult, Session
+from .physical import ExecContext, ExecMetrics, TableStorage, execute
+from .rewriter import RelationalRewriter, make_ce_transform
+from .rules import optimize_single
+from .schema import F32, I32, STR, ColType, Schema, Table, next_pow2
+from .stats import (RelationalCostModel, StatsRegistry, build_table_stats,
+                    required_columns, selectivity)

@@ -1,0 +1,178 @@
+"""The "SparkSQL Server" (paper §5): a centralized session that
+accumulates client queries, runs the multi-query optimizer over the
+batch, and executes cache plans + rewritten queries on the cluster.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from ..core.cache import CacheManager
+from ..core.optimizer import MultiQueryOptimizer, OptimizedBatch
+from . import logical as L
+from .physical import ExecContext, ExecMetrics, TableStorage, execute
+from .rewriter import RelationalRewriter, make_ce_transform
+from .rules import optimize_single
+from .schema import Table
+from .stats import RelationalCostModel, StatsRegistry, build_table_stats
+
+
+@dataclass
+class QueryResult:
+    table: Table
+    seconds: float
+    plan: L.Node
+
+
+@dataclass
+class BatchResult:
+    results: List[QueryResult]
+    total_seconds: float
+    optimize_seconds: float = 0.0
+    mqo: Optional[OptimizedBatch] = None
+    cache_report: dict = field(default_factory=dict)
+    metrics: Optional[ExecMetrics] = None
+
+    @property
+    def per_query_seconds(self) -> List[float]:
+        return [r.seconds for r in self.results]
+
+
+def _spill_to_host(table: Table) -> Table:
+    return Table(table.schema,
+                 {n: np.asarray(a) for n, a in table.columns.items()},
+                 table.nrows)
+
+
+def _unspill(table: Table) -> Table:
+    import jax.numpy as jnp
+
+    return Table(table.schema,
+                 {n: jnp.asarray(a) for n, a in table.columns.items()},
+                 table.nrows)
+
+
+class Session:
+    """Catalog + stats + cache + MQO — the paper's prototype server."""
+
+    def __init__(self, budget_bytes: int = 1 << 30,
+                 sharding: Optional[jax.sharding.Sharding] = None,
+                 disk_latency_per_byte: float = 0.0):
+        self.catalog: Dict[str, TableStorage] = {}
+        self.stats = StatsRegistry()
+        self.budget = int(budget_bytes)
+        self.sharding = sharding
+        self.disk_latency_per_byte = disk_latency_per_byte
+        self.cost_model = RelationalCostModel(self.stats)
+
+    # -- catalog management -------------------------------------------------
+    def register(self, storage: TableStorage,
+                 columnar_for_stats: Optional[Dict[str, np.ndarray]] = None):
+        self.catalog[storage.name] = storage
+        cols = storage.columnar if storage.columnar is not None \
+            else columnar_for_stats
+        assert cols is not None, "stats need typed columns (pre-processing)"
+        self.stats.register(
+            storage.name,
+            build_table_stats(cols, storage.nrows, storage.schema))
+
+    def table(self, name: str) -> L.Scan:
+        st = self.catalog[name]
+        return L.scan(name, st.schema, st.fmt)
+
+    # -- execution ------------------------------------------------------------
+    def _fresh_ctx(self, cache: Optional[CacheManager] = None) -> ExecContext:
+        return ExecContext(
+            catalog=self.catalog, cache=cache,
+            sharding=self.sharding,
+            disk_latency_per_byte=self.disk_latency_per_byte)
+
+    def run_one(self, plan: L.Node,
+                ctx: Optional[ExecContext] = None) -> QueryResult:
+        ctx = ctx or self._fresh_ctx()
+        t0 = time.perf_counter()
+        table = execute(plan, ctx)
+        jax.block_until_ready(list(table.columns.values()))
+        return QueryResult(table, time.perf_counter() - t0, plan)
+
+    def run_batch(
+        self,
+        plans: Sequence[L.Node],
+        *,
+        mqo: bool = True,
+        k: int = 2,
+        budget_bytes: Optional[int] = None,
+        locally_optimize: bool = True,
+    ) -> BatchResult:
+        """Execute a batch of queries, with or without worksharing."""
+        if locally_optimize:
+            plans = [optimize_single(p) for p in plans]
+
+        if not mqo:
+            ctx = self._fresh_ctx()
+            t0 = time.perf_counter()
+            results = [self.run_one(p, ctx) for p in plans]
+            return BatchResult(results, time.perf_counter() - t0,
+                               metrics=ctx.metrics)
+
+        budget = budget_bytes if budget_bytes is not None else self.budget
+        optimizer = MultiQueryOptimizer(
+            cost_model=self.cost_model,
+            rewriter=RelationalRewriter(),
+            budget_bytes=budget,
+            k=k,
+            ce_transform=make_ce_transform(),
+        )
+        optimized = optimizer.optimize(list(plans))
+
+        cache = CacheManager(budget, spill_fn=_spill_to_host,
+                             unspill_fn=_unspill)
+        ctx = self._fresh_ctx(cache)
+        ctx.cache_plans = dict(optimized.rewritten.cache_plans)
+
+        t0 = time.perf_counter()
+        results = [self.run_one(p, ctx) for p in optimized.rewritten.plans]
+        total = time.perf_counter() - t0
+        return BatchResult(
+            results, total,
+            optimize_seconds=optimized.report.optimize_seconds,
+            mqo=optimized,
+            cache_report=cache.report(),
+            metrics=ctx.metrics,
+        )
+
+    # -- naive full-input caching (the paper's "FC" baseline) --------------
+    def run_batch_fullcache(self, plans: Sequence[L.Node],
+                            budget_bytes: Optional[int] = None
+                            ) -> BatchResult:
+        """Cache the entire input relations on first touch (§6.3 'FC')."""
+        from ..core.fingerprint import fingerprint
+
+        plans = [optimize_single(p) for p in plans]
+        budget = budget_bytes if budget_bytes is not None else self.budget
+        cache = CacheManager(budget, spill_fn=_spill_to_host,
+                             unspill_fn=_unspill)
+        ctx = self._fresh_ctx(cache)
+
+        # rewrite every Scan into CachedScan of the full relation
+        def rewrite(node: L.Node) -> L.Node:
+            if isinstance(node, L.Scan):
+                psi = fingerprint(node)
+                if psi not in ctx.cache_plans:
+                    ctx.cache_plans[psi] = L.Cache(child=node, psi=psi)
+                return L.CachedScan(psi=psi, _schema=node.schema,
+                                    source_label=node.label)
+            if not node.children:
+                return node
+            return node.with_children(
+                tuple(rewrite(c) for c in node.children))
+
+        rewritten = [rewrite(p) for p in plans]
+        t0 = time.perf_counter()
+        results = [self.run_one(p, ctx) for p in rewritten]
+        return BatchResult(results, time.perf_counter() - t0,
+                           cache_report=cache.report(), metrics=ctx.metrics)

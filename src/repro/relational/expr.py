@@ -1,0 +1,226 @@
+"""Scalar predicate / expression trees over columns.
+
+Expressions are immutable, canonicalizable (for strict fingerprints and
+OR-merge dedup), evaluable against a dict of JAX column arrays, and
+introspectable (column references) for projection augmentation and
+selectivity estimation.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, FrozenSet, Sequence, Tuple, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+Value = Union[int, float, str, bytes]
+
+_OPS = ("<", "<=", ">", ">=", "==", "!=")
+
+
+@dataclass(frozen=True)
+class Col:
+    name: str
+
+
+@dataclass(frozen=True)
+class Lit:
+    value: Value
+
+
+@dataclass(frozen=True)
+class Cmp:
+    op: str
+    col: Col
+    rhs: Union[Lit, Col]
+
+    def __post_init__(self):
+        assert self.op in _OPS, self.op
+
+
+@dataclass(frozen=True)
+class And:
+    parts: Tuple["Expr", ...]
+
+
+@dataclass(frozen=True)
+class Or:
+    parts: Tuple["Expr", ...]
+
+
+@dataclass(frozen=True)
+class Not:
+    part: "Expr"
+
+
+@dataclass(frozen=True)
+class TrueExpr:
+    pass
+
+
+Expr = Union[Cmp, And, Or, Not, TrueExpr]
+TRUE = TrueExpr()
+
+
+# ---------------------------------------------------------------------------
+# constructors
+# ---------------------------------------------------------------------------
+def col(name: str) -> Col:
+    return Col(name)
+
+
+def cmp(name: str, op: str, value: Value) -> Cmp:
+    return Cmp(op, Col(name), Lit(value))
+
+
+def col_cmp(left: str, op: str, right: str) -> Cmp:
+    return Cmp(op, Col(left), Col(right))
+
+
+def and_(*parts: Expr) -> Expr:
+    flat = []
+    for p in parts:
+        if isinstance(p, TrueExpr):
+            continue
+        flat.extend(p.parts if isinstance(p, And) else (p,))
+    if not flat:
+        return TRUE
+    return flat[0] if len(flat) == 1 else And(tuple(flat))
+
+
+def or_(*parts: Expr) -> Expr:
+    flat = []
+    for p in parts:
+        if isinstance(p, TrueExpr):
+            return TRUE
+        flat.extend(p.parts if isinstance(p, Or) else (p,))
+    # dedup by canonical form, preserving first-seen order
+    seen, uniq = set(), []
+    for p in flat:
+        key = canonical(p)
+        if key not in seen:
+            seen.add(key)
+            uniq.append(p)
+    return uniq[0] if len(uniq) == 1 else Or(tuple(uniq))
+
+
+def not_(part: Expr) -> Expr:
+    return Not(part)
+
+
+# ---------------------------------------------------------------------------
+# introspection
+# ---------------------------------------------------------------------------
+def canonical(e: Expr) -> tuple:
+    """Deterministic hashable form (commutative parts sorted)."""
+    if isinstance(e, TrueExpr):
+        return ("true",)
+    if isinstance(e, Cmp):
+        rhs = (("col", e.rhs.name) if isinstance(e.rhs, Col)
+               else ("lit", _lit_key(e.rhs.value)))
+        return ("cmp", e.op, e.col.name, rhs)
+    if isinstance(e, And):
+        return ("and",) + tuple(sorted(canonical(p) for p in e.parts))
+    if isinstance(e, Or):
+        return ("or",) + tuple(sorted(canonical(p) for p in e.parts))
+    if isinstance(e, Not):
+        return ("not", canonical(e.part))
+    raise TypeError(type(e))
+
+
+def _lit_key(v: Value):
+    if isinstance(v, bytes):
+        return ("b", v)
+    if isinstance(v, str):
+        return ("b", v.encode("utf-8"))
+    if isinstance(v, bool):
+        return ("i", int(v))
+    if isinstance(v, int):
+        return ("i", v)
+    return ("f", float(v))
+
+
+def columns_of(e: Expr) -> FrozenSet[str]:
+    if isinstance(e, TrueExpr):
+        return frozenset()
+    if isinstance(e, Cmp):
+        cols = {e.col.name}
+        if isinstance(e.rhs, Col):
+            cols.add(e.rhs.name)
+        return frozenset(cols)
+    if isinstance(e, (And, Or)):
+        out: FrozenSet[str] = frozenset()
+        for p in e.parts:
+            out |= columns_of(p)
+        return out
+    if isinstance(e, Not):
+        return columns_of(e.part)
+    raise TypeError(type(e))
+
+
+# ---------------------------------------------------------------------------
+# evaluation
+# ---------------------------------------------------------------------------
+def _encode_str(v: Value, width: int) -> np.ndarray:
+    raw = v if isinstance(v, bytes) else str(v).encode("utf-8")
+    buf = np.zeros((width,), np.uint8)
+    raw = raw[:width]
+    buf[: len(raw)] = np.frombuffer(raw, np.uint8)
+    return buf
+
+
+def eval_expr(e: Expr, columns: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """Evaluate a predicate to a boolean row mask."""
+    if isinstance(e, TrueExpr):
+        n = next(iter(columns.values())).shape[0]
+        return jnp.ones((n,), jnp.bool_)
+    if isinstance(e, Cmp):
+        lhs = columns[e.col.name]
+        if isinstance(e.rhs, Col):
+            rhs = columns[e.rhs.name]
+        elif lhs.ndim == 2:  # string column: fixed-width byte compare
+            rhs = jnp.asarray(_encode_str(e.rhs.value, lhs.shape[1]))
+            eq = jnp.all(lhs == rhs[None, :], axis=1)
+            if e.op == "==":
+                return eq
+            if e.op == "!=":
+                return ~eq
+            raise ValueError(f"op {e.op} unsupported for string columns")
+        else:
+            rhs = jnp.asarray(e.rhs.value, dtype=lhs.dtype)
+        if lhs.ndim == 2 and isinstance(e.rhs, Col):
+            eq = jnp.all(lhs == rhs, axis=1)
+            return eq if e.op == "==" else ~eq
+        return {
+            "<": lambda a, b: a < b, "<=": lambda a, b: a <= b,
+            ">": lambda a, b: a > b, ">=": lambda a, b: a >= b,
+            "==": lambda a, b: a == b, "!=": lambda a, b: a != b,
+        }[e.op](lhs, rhs)
+    if isinstance(e, And):
+        m = eval_expr(e.parts[0], columns)
+        for p in e.parts[1:]:
+            m = m & eval_expr(p, columns)
+        return m
+    if isinstance(e, Or):
+        m = eval_expr(e.parts[0], columns)
+        for p in e.parts[1:]:
+            m = m | eval_expr(p, columns)
+        return m
+    if isinstance(e, Not):
+        return ~eval_expr(e.part, columns)
+    raise TypeError(type(e))
+
+
+def pretty(e: Expr) -> str:
+    if isinstance(e, TrueExpr):
+        return "true"
+    if isinstance(e, Cmp):
+        rhs = e.rhs.name if isinstance(e.rhs, Col) else repr(e.rhs.value)
+        return f"{e.col.name}{e.op}{rhs}"
+    if isinstance(e, And):
+        return "(" + " & ".join(pretty(p) for p in e.parts) + ")"
+    if isinstance(e, Or):
+        return "(" + " | ".join(pretty(p) for p in e.parts) + ")"
+    if isinstance(e, Not):
+        return f"!{pretty(e.part)}"
+    raise TypeError(type(e))

@@ -1,0 +1,496 @@
+"""Physical (eager, per-operator jitted) execution of logical plans.
+
+The Spark analog: every operator materializes a fixed-shape distributed
+columnar relation (padded to a power-of-two capacity so jit caches hit
+across queries).  Orchestration is host-side Python — exactly like a
+Spark driver launching stages — while each operator body is a jitted
+JAX function that runs SPMD when the arrays carry a NamedSharding.
+
+Storage formats (the paper's CSV vs Parquet axis):
+  * ``csv``      — the table lives on "disk" (host memory) as one
+    fixed-width UTF-8 byte matrix; a scan must move the WHOLE row bytes
+    to the device and parse the needed fields with vectorized digit
+    arithmetic (reproducing CSV parse/typecast cost).
+  * ``columnar`` — typed host arrays per column; a scan moves only the
+    needed columns (Parquet-analog column pruning).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.cache import CacheManager
+from . import expr as E
+from . import logical as L
+from .schema import Schema, Table, next_pow2
+
+I32_SENTINEL = np.int32(2**31 - 1)
+
+
+# ---------------------------------------------------------------------------
+# host-side storage ("disk")
+# ---------------------------------------------------------------------------
+@dataclass
+class TableStorage:
+    name: str
+    schema: Schema
+    nrows: int
+    fmt: str                      # "csv" | "columnar"
+    columnar: Optional[Dict[str, np.ndarray]] = None
+    csv_bytes: Optional[np.ndarray] = None        # (nrows, row_csv_bytes) u8
+
+    @property
+    def disk_bytes(self) -> int:
+        if self.fmt == "csv":
+            return int(self.csv_bytes.size)
+        return int(sum(a.nbytes for a in self.columnar.values()))
+
+
+@dataclass
+class ExecMetrics:
+    bytes_read_disk: int = 0
+    bytes_parsed: int = 0
+    bytes_cached_read: int = 0
+    rows_processed: int = 0
+    op_seconds: Dict[str, float] = field(default_factory=dict)
+
+    def add_time(self, op: str, dt: float):
+        self.op_seconds[op] = self.op_seconds.get(op, 0.0) + dt
+
+
+@dataclass
+class ExecContext:
+    catalog: Dict[str, TableStorage]
+    cache: Optional[CacheManager] = None
+    cache_plans: Dict[bytes, L.Node] = field(default_factory=dict)
+    metrics: ExecMetrics = field(default_factory=ExecMetrics)
+    # Optional sharding applied to row-dim of loaded columns.
+    sharding: Optional[jax.sharding.Sharding] = None
+    # emulate slow disk: per-byte sleep (used by benchmarks to model I/O)
+    disk_latency_per_byte: float = 0.0
+    # route numeric predicates through the Pallas filter-scan kernel
+    # (TPU target; interpret mode on CPU — used by tests)
+    use_pallas_filter: bool = False
+
+
+# ---------------------------------------------------------------------------
+# jitted primitives (cached per static signature)
+# ---------------------------------------------------------------------------
+_POW10_I = jnp.asarray([10**k for k in range(9, -1, -1)], jnp.int32)
+_POW10_F = jnp.asarray([10.0**k for k in range(7, -1, -1)], jnp.float32)
+
+
+@jax.jit
+def _parse_i32(digits: jnp.ndarray) -> jnp.ndarray:
+    """(n, 10) uint8 zero-padded decimal digits -> int32."""
+    d = digits.astype(jnp.int32) - 48
+    return jnp.einsum("nd,d->n", d, _POW10_I,
+                      preferred_element_type=jnp.int32)
+
+
+@jax.jit
+def _parse_f32(digits: jnp.ndarray) -> jnp.ndarray:
+    """(n, 8) uint8 fractional digits -> float32 in [0, 1)."""
+    d = digits.astype(jnp.float32)
+    return jnp.einsum("nd,d->n", d - 48.0, _POW10_F) * jnp.float32(1e-8)
+
+
+def _pred_mask_fn(pred_key, pred: E.Expr, names: Tuple[str, ...]):
+    def f(nrows, *cols):
+        columns = dict(zip(names, cols))
+        mask = E.eval_expr(pred, columns)
+        n = cols[0].shape[0]
+        mask = mask & (jnp.arange(n) < nrows)
+        return mask, jnp.sum(mask.astype(jnp.int32))
+    return jax.jit(f)
+
+
+_FN_CACHE: Dict[tuple, Callable] = {}
+
+
+def _cached(key, builder):
+    fn = _FN_CACHE.get(key)
+    if fn is None:
+        fn = _FN_CACHE[key] = builder()
+    return fn
+
+
+@partial(jax.jit, static_argnames=("new_cap",))
+def _compact(mask: jnp.ndarray, new_cap: int, *cols):
+    """Bring mask-selected rows to the front; slice to new_cap."""
+    order = jnp.argsort(~mask, stable=True)
+    sel = order[:new_cap]
+    return tuple(jnp.take(c, sel, axis=0) for c in cols)
+
+
+@partial(jax.jit, static_argnames=("asc_sentinel",))
+def _sort_order(key: jnp.ndarray, nrows, asc_sentinel: bool):
+    valid = jnp.arange(key.shape[0]) < nrows
+    if key.dtype == jnp.int32:
+        sent = jnp.int32(2**31 - 1)
+        k = jnp.where(valid, key, sent)
+    else:
+        k = jnp.where(valid, key, jnp.inf)
+    return jnp.argsort(k, stable=True)
+
+
+@jax.jit
+def _join_build(rk: jnp.ndarray, r_nrows):
+    masked = jnp.where(jnp.arange(rk.shape[0]) < r_nrows, rk, I32_SENTINEL)
+    order = jnp.argsort(masked, stable=True)
+    return order, jnp.take(masked, order)
+
+
+@jax.jit
+def _join_probe(lk: jnp.ndarray, rk_sorted: jnp.ndarray, l_nrows):
+    valid = jnp.arange(lk.shape[0]) < l_nrows
+    keys = jnp.where(valid, lk, I32_SENTINEL)
+    lo = jnp.searchsorted(rk_sorted, keys, side="left")
+    hi = jnp.searchsorted(rk_sorted, keys, side="right")
+    m = jnp.where(valid & (keys != I32_SENTINEL), hi - lo, 0)
+    return lo, m, jnp.sum(m)
+
+
+@partial(jax.jit, static_argnames=("out_cap",))
+def _join_expand(lo, m, out_cap):
+    starts = jnp.cumsum(m) - m            # exclusive prefix
+    li = jnp.repeat(jnp.arange(m.shape[0]), m,
+                    total_repeat_length=out_cap)
+    inner = jnp.arange(out_cap) - jnp.take(starts, li)
+    ri = jnp.take(lo, li) + inner
+    return li, ri
+
+
+@jax.jit
+def _agg_seg_ids(nrows, *keys):
+    n = keys[0].shape[0]
+    valid = jnp.arange(n) < nrows
+    sk = [jnp.where(valid, k, I32_SENTINEL if k.dtype == jnp.int32
+                    else jnp.inf) for k in keys]
+    order = jnp.lexsort(tuple(reversed(sk)))
+    sorted_valid = jnp.take(valid, order)
+    sorted_keys = [jnp.take(k, order) for k in sk]
+    newgrp = jnp.zeros((n,), jnp.bool_).at[0].set(True)
+    for k in sorted_keys:
+        newgrp = newgrp | (k != jnp.roll(k, 1))
+    newgrp = newgrp & sorted_valid
+    gid = jnp.cumsum(newgrp.astype(jnp.int32)) - 1
+    n_groups = jnp.sum(newgrp)
+    return order, gid, sorted_valid, n_groups
+
+
+# ---------------------------------------------------------------------------
+# operator implementations
+# ---------------------------------------------------------------------------
+def _device_put(arr: np.ndarray, ctx: ExecContext) -> jnp.ndarray:
+    if ctx.disk_latency_per_byte:
+        time.sleep(arr.nbytes * ctx.disk_latency_per_byte)
+    if ctx.sharding is not None and arr.ndim >= 1:
+        try:
+            return jax.device_put(arr, ctx.sharding)
+        except ValueError:
+            pass
+    return jnp.asarray(arr)
+
+
+def _exec_scan(node: L.Scan, ctx: ExecContext,
+               needed: Tuple[str, ...]) -> Table:
+    st = ctx.catalog[node.table]
+    cap = next_pow2(st.nrows)
+    cols: Dict[str, jnp.ndarray] = {}
+    if st.fmt == "csv":
+        # must read the WHOLE row bytes (CSV is row-oriented)
+        raw_np = st.csv_bytes
+        pad = np.zeros((cap - st.nrows, raw_np.shape[1]), np.uint8)
+        raw = _device_put(np.concatenate([raw_np, pad], 0), ctx)
+        ctx.metrics.bytes_read_disk += raw_np.nbytes
+        offsets = st.schema.csv_offsets()
+        for name in needed:
+            off, w = offsets[name]
+            fieldb = jax.lax.slice_in_dim(raw, off, off + w, axis=1)
+            t = st.schema.coltype(name)
+            ctx.metrics.bytes_parsed += st.nrows * w
+            if t.kind == "i32":
+                cols[name] = _parse_i32(fieldb)
+            elif t.kind == "f32":
+                cols[name] = _parse_f32(fieldb)
+            else:
+                cols[name] = fieldb
+    else:
+        for name in needed:
+            arr = st.columnar[name]
+            ctx.metrics.bytes_read_disk += arr.nbytes
+            pad_shape = (cap - st.nrows,) + arr.shape[1:]
+            padded = np.concatenate([arr, np.zeros(pad_shape, arr.dtype)], 0)
+            cols[name] = _device_put(padded, ctx)
+    schema = st.schema.select(needed)
+    return Table(schema, cols, st.nrows)
+
+
+def _exec_filter(pred: E.Expr, child: Table, ctx: ExecContext) -> Table:
+    names = child.schema.names
+    mask = count = None
+    if ctx.use_pallas_filter:
+        mask, count = _try_pallas_filter(pred, child)
+    if mask is None:
+        key = ("mask", E.canonical(pred), names, child.capacity)
+        fn = _cached(key, lambda: _pred_mask_fn(key, pred, names))
+        mask, count = fn(jnp.int32(child.nrows),
+                         *[child.columns[n] for n in names])
+    count = int(count)
+    new_cap = next_pow2(max(count, 1))
+    out = _compact(mask, new_cap, *[child.columns[n] for n in names])
+    ctx.metrics.rows_processed += child.nrows
+    return Table(child.schema, dict(zip(names, out)), count)
+
+
+def _exec_join(node: L.Join, left: Table, right: Table,
+               ctx: ExecContext) -> Table:
+    assert len(node.on) == 1, "single-key equi-joins (engine restriction)"
+    lc, rc = node.on[0]
+    if not left.schema.has(lc):
+        lc, rc = rc, lc
+    lk, rk = left.columns[lc], right.columns[rc]
+    assert lk.dtype == jnp.int32, "join keys must be int32"
+
+    # build side = right (sorted); probe = left.  Padding rows beyond
+    # nrows hold stale values (compaction slack) — mask them to the
+    # sentinel BEFORE sorting so rk_sorted is genuinely ascending and
+    # searchsorted never matches padding.
+    order, rk_sorted = _join_build(rk, jnp.int32(right.nrows))
+    lo, m, total = _join_probe(lk, rk_sorted, jnp.int32(left.nrows))
+    total = int(total)
+    out_cap = next_pow2(max(total, 1))
+    li, ri = _join_expand(lo, m, out_cap)
+    cols: Dict[str, jnp.ndarray] = {}
+    for n in left.schema.names:
+        cols[n] = jnp.take(left.columns[n], li, axis=0)
+    for n in right.schema.names:
+        src = jnp.take(right.columns[n], order, axis=0)
+        cols[n] = jnp.take(src, ri, axis=0)
+    ctx.metrics.rows_processed += left.nrows + right.nrows
+    return Table(left.schema.concat(right.schema), cols, total)
+
+
+_SEG_FNS = {
+    "sum": jax.ops.segment_sum,
+    "min": jax.ops.segment_min,
+    "max": jax.ops.segment_max,
+}
+
+
+def _exec_aggregate(node: L.Aggregate, child: Table,
+                    ctx: ExecContext) -> Table:
+    n = child.capacity
+    keys = [child.columns[g] for g in node.group_by]
+    assert all(k.ndim == 1 for k in keys), "group keys must be scalar cols"
+
+    order, gid, sorted_valid, n_groups = _agg_seg_ids(
+        jnp.int32(child.nrows), *keys)
+    n_groups = int(n_groups)
+    cap = next_pow2(max(n_groups, 1))
+
+    fns = tuple(fn for _, fn, _ in node.aggs)
+
+    def make_reduce():
+        def reduce_all(order, gid, sorted_valid, *vals):
+            gid_c = jnp.where(sorted_valid, gid, cap)  # padding -> dropped
+            outs = []
+            for fn_name, v in zip(fns, vals):
+                sv = jnp.take(v, order, axis=0)
+                if fn_name == "count":
+                    o = jax.ops.segment_sum(
+                        sorted_valid.astype(jnp.int32), gid_c,
+                        num_segments=cap)
+                elif fn_name == "mean":
+                    s = jax.ops.segment_sum(
+                        jnp.where(sorted_valid, sv.astype(jnp.float32), 0.0),
+                        gid_c, num_segments=cap)
+                    c = jax.ops.segment_sum(
+                        sorted_valid.astype(jnp.float32), gid_c,
+                        num_segments=cap)
+                    o = s / jnp.maximum(c, 1.0)
+                elif fn_name in ("min", "max"):
+                    big = jnp.asarray(
+                        I32_SENTINEL if sv.dtype == jnp.int32 else jnp.inf,
+                        sv.dtype)
+                    fill = big if fn_name == "min" else (
+                        -big if sv.dtype != jnp.int32 else -big - 1)
+                    o = _SEG_FNS[fn_name](jnp.where(sorted_valid, sv, fill),
+                                          gid_c, num_segments=cap)
+                else:
+                    o = jax.ops.segment_sum(
+                        jnp.where(sorted_valid, sv,
+                                  jnp.zeros((), sv.dtype)), gid_c,
+                        num_segments=cap)
+                outs.append(o)
+            # first sorted row index of each group -> representative keys
+            first = jax.ops.segment_min(
+                jnp.where(sorted_valid, jnp.arange(n), n), gid_c,
+                num_segments=cap)
+            return tuple(outs), first
+
+        return jax.jit(reduce_all)
+
+    vals = tuple(child.columns[c if c else node.group_by[0]]
+                 for _, fn, c in node.aggs)
+    reduce_key = ("agg_reduce", fns, cap, n,
+                  tuple(str(v.dtype) for v in vals))
+    reduce_all = _cached(reduce_key, make_reduce)
+    outs, first = reduce_all(order, gid, sorted_valid, *vals)
+
+    cols: Dict[str, jnp.ndarray] = {}
+    safe_first = jnp.minimum(first, n - 1)
+    for g in node.group_by:
+        sorted_col = jnp.take(child.columns[g], order, axis=0)
+        cols[g] = jnp.take(sorted_col, safe_first, axis=0)
+    for (out_name, fn, c), o in zip(node.aggs, outs):
+        cols[out_name] = o
+    ctx.metrics.rows_processed += child.nrows
+    return Table(node.schema, cols, n_groups)
+
+
+def _exec_sort(node: L.Sort, child: Table, ctx: ExecContext) -> Table:
+    key = child.columns[node.by]
+    if node.desc:
+        if key.dtype == jnp.int32:
+            key = jnp.where(jnp.arange(child.capacity) < child.nrows,
+                            -key, I32_SENTINEL)
+        else:
+            key = jnp.where(jnp.arange(child.capacity) < child.nrows,
+                            -key, jnp.inf)
+        order = jnp.argsort(key, stable=True)
+    else:
+        order = _sort_order(key, jnp.int32(child.nrows), True)
+    cols = {n: jnp.take(child.columns[n], order, axis=0)
+            for n in child.schema.names}
+    return Table(child.schema, cols, child.nrows)
+
+
+def _exec_union(left: Table, right: Table, ctx: ExecContext) -> Table:
+    total = left.nrows + right.nrows
+    cap = next_pow2(max(total, 1))
+    cols = {}
+    for name in left.schema.names:
+        a = left.columns[name][: left.capacity]
+        b = right.columns[name][: right.capacity]
+        mask = jnp.concatenate([
+            jnp.arange(left.capacity) < left.nrows,
+            jnp.arange(right.capacity) < right.nrows])
+        merged = jnp.concatenate([a, b], axis=0)
+        (compacted,) = _compact(mask, cap, merged)
+        cols[name] = compacted
+    return Table(left.schema, cols, total)
+
+
+def _try_pallas_filter(pred: E.Expr, child: Table):
+    """Route a numeric predicate through the fused filter-scan kernel.
+    Returns (mask, count) or (None, None) when unsupported (string
+    predicates / col-col compares stay on the XLA path)."""
+    from ..kernels.filter_project.ops import compile_predicate, filter_mask
+
+    numeric = tuple(n for n, t in child.schema.fields
+                    if t.kind in ("i32", "f32"))
+    try:
+        program = compile_predicate(pred, numeric)
+    except (ValueError, KeyError):
+        return None, None
+    cols = tuple(child.columns[n] for n in numeric)
+    block = min(2048, child.capacity)
+    mask, counts = filter_mask(cols, program, child.nrows, block=block)
+    return mask, jnp.sum(counts)
+
+
+# ---------------------------------------------------------------------------
+# the interpreter
+# ---------------------------------------------------------------------------
+def execute(node: L.Node, ctx: ExecContext) -> Table:
+    from .stats import required_columns
+
+    req = required_columns(node)
+    return _exec(node, ctx, req)
+
+
+def _exec(node: L.Node, ctx: ExecContext, req) -> Table:
+    t0 = time.perf_counter()
+    if isinstance(node, L.Scan):
+        needed = req.get(id(node), frozenset(node.schema.names))
+        ordered = tuple(n for n in node.schema.names if n in needed)
+        out = _exec_scan(node, ctx, ordered)
+    elif isinstance(node, L.CachedScan):
+        out = _exec_cached_scan(node, ctx, req)
+    elif isinstance(node, L.Filter):
+        child = _exec(node.child, ctx, req)
+        out = _exec_filter(node.pred, child, ctx)
+    elif isinstance(node, L.Project):
+        child = _exec(node.child, ctx, req)
+        out = child.select([c for c in node.cols if child.schema.has(c)])
+    elif isinstance(node, L.Join):
+        left = _exec(node.left, ctx, req)
+        right = _exec(node.right, ctx, req)
+        out = _exec_join(node, left, right, ctx)
+    elif isinstance(node, L.Aggregate):
+        child = _exec(node.child, ctx, req)
+        out = _exec_aggregate(node, child, ctx)
+    elif isinstance(node, L.Sort):
+        child = _exec(node.child, ctx, req)
+        out = _exec_sort(node, child, ctx)
+    elif isinstance(node, L.Limit):
+        child = _exec(node.child, ctx, req)
+        new_n = min(node.n, child.nrows)
+        cap = next_pow2(max(new_n, 1))
+        cols = {n: child.columns[n][:cap] for n in child.schema.names}
+        out = Table(child.schema, cols, new_n)
+    elif isinstance(node, L.Union):
+        left = _exec(node.left, ctx, req)
+        right = _exec(node.right, ctx, req)
+        out = _exec_union(left, right, ctx)
+    elif isinstance(node, L.Cache):
+        out = _materialize_cache(node, ctx, req)
+    else:
+        raise TypeError(type(node))
+    jax.block_until_ready(list(out.columns.values()))
+    ctx.metrics.add_time(node.label.split(":")[0],
+                         time.perf_counter() - t0)
+    return out
+
+
+def _materialize_cache(node: L.Cache, ctx: ExecContext, req) -> Table:
+    assert ctx.cache is not None, "cache plan requires a CacheManager"
+    existing = ctx.cache.get(node.psi)
+    if existing is not None:
+        return existing
+    table = _exec(node.child, ctx, req)
+    ctx.cache.put(node.psi, table, nbytes=table.nbytes,
+                  est_bytes=table.logical_nbytes)
+    return table
+
+
+def _exec_cached_scan(node: L.CachedScan, ctx: ExecContext, req) -> Table:
+    assert ctx.cache is not None
+    table = ctx.cache.get(node.psi)
+    if table is None:
+        # First consumer pays the materialization (Spark cache() is a
+        # transformation — paper §6.3 footnote 5).
+        plan = ctx.cache_plans.get(node.psi)
+        if plan is None:
+            raise KeyError(f"no cache plan registered for ψ="
+                           f"{node.psi.hex()[:12]}")
+        table = _exec(plan, ctx, required_columns_of(plan))
+    else:
+        ctx.metrics.bytes_cached_read += table.nbytes
+    # present the cached covering relation under this node's schema
+    return table.select([n for n in node.schema.names
+                         if n in table.schema.names])
+
+
+def required_columns_of(plan: L.Node):
+    from .stats import required_columns
+
+    return required_columns(plan)

@@ -1,0 +1,5 @@
+# Beyond-paper integration: the paper's cache-based MQO applied to LLM
+# serving (shared-prefix admission under an HBM budget).
+from .costs import ServingCostModel
+from .engine import ServingEngine, ServingReport
+from .request import GenerationRequest, TokenBlock, plan_requests

@@ -1,0 +1,201 @@
+"""Batched serving engine with cache-based multi-request optimization.
+
+The paper's four phases over a batch of generation requests:
+
+  1. identify shared full-block prefixes (Merkle chain fingerprints);
+  2. covering expressions are the shared prefixes themselves (strict
+     identity -> merge is the identity, extraction = resume);
+  3. MCKP admission into the HBM state pool under a byte budget, with
+     Algorithm-2 groups (nested prefixes are mutually exclusive
+     options under their longest selected ancestor);
+  4. rewrite: each request prefills only its suffix from the longest
+     admitted prefix state; admitted prefixes chain onto each other.
+
+Guarantee (tested): generations are bit-identical with MQO on or off —
+prefix state reuse is exact, the optimization only removes recompute.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.cache import CacheManager
+from ..core.candidates import generate_knapsack_items
+from ..core.costmodel import price_ces
+from ..core.covering import build_covering_expressions
+from ..core.mckp import solve_mckp
+from ..models.config import ArchConfig
+from ..models.decoder import init_cache
+from ..models.model import decode_step
+from .costs import ServingCostModel
+from .request import (GenerationRequest, TokenBlock,
+                      identify_shared_prefixes, plan_requests)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _prefill_scan(params, cache, tokens: jnp.ndarray, start_len, cfg):
+    """Sequential cache-filling prefill (scan of decode steps).
+
+    tokens: (B, T).  Returns (cache, last_logits (B, V)).
+    NOTE: the parallel (flash) prefill is used for dry-run lowering;
+    this scan variant is the cache-materializing path of the serving
+    engine — fusing the two is tracked in EXPERIMENTS.md §Perf.
+    """
+    def step(carry, tok_t):
+        cache, i = carry
+        logits, cache = decode_step(params, cache, tok_t[:, None], i, cfg)
+        return (cache, i + 1), logits
+
+    (cache, _), logits = jax.lax.scan(
+        step, (cache, jnp.asarray(start_len, jnp.int32)), tokens.T)
+    return cache, logits[-1]
+
+
+@partial(jax.jit, static_argnames=("cfg", "n_new"))
+def _generate_scan(params, cache, first_tok, start_len, cfg, n_new: int):
+    def step(carry, _):
+        cache, tok, i = carry
+        logits, cache = decode_step(params, cache, tok, i, cfg)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return (cache, nxt, i + 1), nxt[:, 0]
+
+    (cache, _, _), toks = jax.lax.scan(
+        step, (cache, first_tok, jnp.asarray(start_len, jnp.int32)),
+        None, length=n_new)
+    return toks.T, cache        # (B, n_new)
+
+
+@dataclass
+class ServingReport:
+    n_requests: int = 0
+    n_ses: int = 0
+    n_selected: int = 0
+    pool_budget: int = 0
+    pool_used: int = 0
+    tokens_prefilled: int = 0
+    tokens_prefilled_baseline: int = 0
+    prefill_flops_saved: float = 0.0
+    optimize_seconds: float = 0.0
+    wall_seconds: float = 0.0
+
+    @property
+    def prefill_token_ratio(self) -> float:
+        base = max(self.tokens_prefilled_baseline, 1)
+        return self.tokens_prefilled / base
+
+
+class ServingEngine:
+    def __init__(self, cfg: ArchConfig, params, *,
+                 pool_budget_bytes: int, block_size: int = 64,
+                 max_len: int = 512, k: int = 2):
+        self.cfg = cfg
+        self.params = params
+        self.block_size = block_size
+        self.max_len = max_len
+        self.k = k
+        self.cost_model = ServingCostModel(cfg)
+        self.pool_budget = int(pool_budget_bytes)
+
+    def _fresh_cache(self, batch: int = 1):
+        return init_cache(self.cfg, batch, self.max_len,
+                          jnp.dtype(self.cfg.dtype))
+
+    # ------------------------------------------------------------------
+    def run_batch(self, requests: Sequence[GenerationRequest], *,
+                  mqo: bool = True) -> Tuple[List[np.ndarray],
+                                             ServingReport]:
+        report = ServingReport(n_requests=len(requests),
+                               pool_budget=self.pool_budget)
+        t_wall = time.perf_counter()
+        requests = plan_requests(list(requests), self.block_size)
+        report.tokens_prefilled_baseline = sum(len(r.prompt)
+                                               for r in requests)
+
+        pool = CacheManager(self.pool_budget)
+        selected_by_psi: Dict[bytes, TokenBlock] = {}
+
+        if mqo:
+            t0 = time.perf_counter()
+            ses = identify_shared_prefixes(requests, k=self.k)
+            report.n_ses = len(ses)
+            ces = build_covering_expressions(ses)
+            price_ces(ces, self.cost_model)
+            items = generate_knapsack_items(ces)
+            sol = solve_mckp(items, self.pool_budget)
+            report.optimize_seconds = time.perf_counter() - t0
+            report.n_selected = len(sol.ces)
+
+            # materialize admitted prefixes, chaining longer onto shorter
+            for ce in sorted(sol.ces, key=lambda c: c.tree.n_tokens):
+                chain: TokenBlock = ce.tree
+                anc_psi, anc_len = self._longest_cached_ancestor(
+                    chain, pool)
+                if anc_psi is not None:
+                    cache, _ = pool.get(anc_psi)
+                else:
+                    cache, anc_len = self._fresh_cache(), 0
+                delta = chain.full_tokens()[anc_len:]
+                cache, _ = _prefill_scan(
+                    self.params, cache, jnp.asarray(delta[None]),
+                    anc_len, self.cfg)
+                report.tokens_prefilled += len(delta)
+                pool.put(ce.psi, (cache, chain.n_tokens),
+                         nbytes=self.cost_model.state_bytes(
+                             chain.n_tokens),
+                         est_bytes=ce.weight)
+                selected_by_psi[ce.psi] = chain
+                report.prefill_flops_saved += ce.value * (
+                    self.cost_model.chips * 1.0)
+
+        # rewrite + execute every request
+        outputs: List[np.ndarray] = []
+        for r in requests:
+            cache, start = self._resume_point(r, pool)
+            suffix = np.concatenate(
+                [r.chain.full_tokens()[start:] if r.chain is not None
+                 else np.zeros(0, np.int32), r.tail])
+            if len(suffix) > 1:
+                cache, _ = _prefill_scan(
+                    self.params, cache,
+                    jnp.asarray(suffix[:-1][None]), start, self.cfg)
+                report.tokens_prefilled += len(suffix) - 1
+            first = jnp.asarray(suffix[-1:][None])
+            toks, _ = _generate_scan(
+                self.params, cache, first, len(r.prompt) - 1, self.cfg,
+                r.max_new_tokens)
+            outputs.append(np.asarray(toks[0]))
+
+        report.pool_used = pool.used_bytes
+        report.wall_seconds = time.perf_counter() - t_wall
+        return outputs, report
+
+    # ------------------------------------------------------------------
+    def _longest_cached_ancestor(self, chain: TokenBlock,
+                                 pool: CacheManager):
+        from ..core.fingerprint import fingerprint
+
+        node = chain.prev
+        while node is not None:
+            psi = fingerprint(node)
+            if pool.contains(psi):
+                return psi, node.n_tokens
+            node = node.prev
+        return None, 0
+
+    def _resume_point(self, r: GenerationRequest, pool: CacheManager):
+        from ..core.fingerprint import fingerprint
+
+        node = r.chain
+        while node is not None:
+            psi = fingerprint(node)
+            if pool.contains(psi):
+                cache, n_tok = pool.get(psi)
+                return cache, n_tok
+            node = node.prev
+        return self._fresh_cache(), 0

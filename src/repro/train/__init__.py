@@ -1,0 +1,3 @@
+from .optimizer import OptConfig, adamw_update, init_opt_state
+from .train_step import make_compressed_train_step, make_train_step
+from .trainer import PreemptionError, TrainerConfig, train

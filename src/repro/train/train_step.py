@@ -1,0 +1,83 @@
+"""Train-step builders: standard pjit path and the gradient-compressed
+shard_map path (bf16 all-reduce + error feedback).
+
+The compressed path halves data-axis all-reduce bytes — one of the
+§Perf candidates for collective-bound cells.  Error feedback keeps the
+update unbiased over time: the fp32 residual that bf16 quantization
+drops is carried in the optimizer state and re-added next step.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ArchConfig
+from ..models.model import loss_fn
+from .optimizer import OptConfig, adamw_update, init_opt_state
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: OptConfig
+                    ) -> Callable:
+    """Standard step: value_and_grad + AdamW.  Collectives are inserted
+    by the SPMD partitioner from the in/out shardings."""
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch, cfg)
+        params, opt_state, metrics = adamw_update(params, grads,
+                                                  opt_state, opt_cfg)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_compressed_train_step(cfg: ArchConfig, opt_cfg: OptConfig,
+                               mesh, data_axes: Tuple[str, ...]
+                               ) -> Callable:
+    """Gradient-compressed step (shard_map over the data axes).
+
+    Per-shard fp32 grads + carried error feedback are quantized to
+    bf16, all-reduced across the data axes in bf16 (half the ICI
+    bytes), then de-quantized; the quantization residual becomes the
+    next step's feedback term.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    def compress_and_reduce(g, err):
+        g = g.astype(jnp.float32) + err
+        g16 = g.astype(jnp.bfloat16)
+        new_err = g - g16.astype(jnp.float32)
+        for ax in data_axes:
+            g16 = jax.lax.pmean(g16, ax)
+        return g16.astype(jnp.float32), new_err
+
+    def train_step(params, opt_state, batch):
+        def local_grads(params, batch):
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch, cfg)
+            return loss, grads
+
+        loss, grads = local_grads(params, batch)
+        err = opt_state.get("err")
+        if err is None:
+            err = jax.tree.map(
+                lambda p: jnp.zeros_like(p, jnp.float32), params)
+        pairs = jax.tree.map(compress_and_reduce, grads, err)
+        grads = jax.tree.map(lambda pr: pr[0], pairs,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_err = jax.tree.map(lambda pr: pr[1], pairs,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        params, new_state, metrics = adamw_update(
+            params, grads, {k: v for k, v in opt_state.items()
+                            if k != "err"}, opt_cfg)
+        new_state["err"] = new_err
+        metrics["loss"] = loss
+        return params, new_state, metrics
+
+    return train_step
+
+
+def init_train_state(cfg: ArchConfig, params) -> Dict[str, Any]:
+    return init_opt_state(params)

@@ -1,0 +1,93 @@
+import os
+import sys
+
+# src-layout import without installation
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+from repro.relational import (I32, STR, F32, Schema, Session, expr as E,
+                              make_storage)
+
+
+@pytest.fixture(scope="session")
+def hr_data():
+    """The paper's running-example catalog (employees/departments/
+    salaries) as typed numpy columns."""
+    rng = np.random.default_rng(7)
+    n_emp, n_dept, n_sal = 3000, 40, 6000
+    g = np.zeros((n_emp, 4), np.uint8)
+    g[:, 0] = np.where(rng.random(n_emp) < 0.5, ord("F"), ord("M"))
+    emp = {
+        "emp_id": np.arange(n_emp, dtype=np.int32),
+        "name": rng.integers(97, 123, (n_emp, 12)).astype(np.uint8),
+        "gender": g,
+        "age": rng.integers(18, 65, n_emp).astype(np.int32),
+        "dep": rng.integers(0, n_dept, n_emp).astype(np.int32),
+    }
+    loc = np.zeros((n_dept, 4), np.uint8)
+    us = rng.random(n_dept) < 0.5
+    loc[us, 0], loc[us, 1] = ord("u"), ord("s")
+    loc[~us, 0], loc[~us, 1] = ord("f"), ord("r")
+    dept = {
+        "dept_id": np.arange(n_dept, dtype=np.int32),
+        "dept_name": rng.integers(97, 123, (n_dept, 12)).astype(np.uint8),
+        "location": loc,
+    }
+    sal = {
+        "sal_emp_id": rng.integers(0, n_emp, n_sal).astype(np.int32),
+        "salary": rng.integers(10_000, 90_000, n_sal).astype(np.int32),
+        "from_year": rng.integers(2000, 2020, n_sal).astype(np.int32),
+    }
+    schemas = {
+        "employees": Schema.of(("emp_id", I32), ("name", STR(12)),
+                               ("gender", STR(4)), ("age", I32),
+                               ("dep", I32)),
+        "departments": Schema.of(("dept_id", I32), ("dept_name", STR(12)),
+                                 ("location", STR(4))),
+        "salaries": Schema.of(("sal_emp_id", I32), ("salary", I32),
+                              ("from_year", I32)),
+    }
+    return {
+        "employees": (schemas["employees"], n_emp, emp),
+        "departments": (schemas["departments"], n_dept, dept),
+        "salaries": (schemas["salaries"], n_sal, sal),
+    }
+
+
+def build_session(hr_data, fmt="columnar", budget=1 << 26) -> Session:
+    sess = Session(budget_bytes=budget)
+    for name, (schema, nrows, cols) in hr_data.items():
+        st, _ = make_storage(name, schema, nrows, fmt, cols=cols)
+        sess.register(st, columnar_for_stats=cols)
+    return sess
+
+
+@pytest.fixture()
+def hr_session(hr_data):
+    return build_session(hr_data)
+
+
+def hr_queries(sess: Session):
+    """The paper's three running-example queries (§3)."""
+    emp, dept, sal = (sess.table("employees"), sess.table("departments"),
+                      sess.table("salaries"))
+    q1 = (emp.filter(E.cmp("gender", "==", "F"))
+          .join(dept.filter(E.cmp("location", "==", "us")),
+                "dep", "dept_id")
+          .join(sal.filter(E.cmp("salary", ">", 20000)),
+                "emp_id", "sal_emp_id")
+          .project("name", "dept_name", "salary")
+          .sort("salary", desc=True))
+    q2 = (emp.filter(E.cmp("gender", "==", "F"))
+          .join(dept.filter(E.cmp("location", "==", "us")),
+                "dep", "dept_id")
+          .join(sal.filter(E.cmp("from_year", ">=", 2010)),
+                "emp_id", "sal_emp_id")
+          .project("name", "dept_name", "from_year"))
+    q3 = (emp.filter(E.cmp("age", ">", 30))
+          .join(sal.filter(E.cmp("salary", ">", 30000)),
+                "emp_id", "sal_emp_id")
+          .project("emp_id", "name", "salary", "from_year"))
+    return [q1, q2, q3]

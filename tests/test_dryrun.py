@@ -1,0 +1,57 @@
+"""Dry-run integration: full-size configs lower+compile on the
+production meshes (subprocess: the dryrun module owns XLA_FLAGS)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run_cell(arch: str, shape: str, multi_pod: bool) -> dict:
+    code = f"""
+        from repro.launch.dryrun import run_cell
+        import json
+        r = run_cell("{arch}", "{shape}", multi_pod={multi_pod},
+                     save=False)
+        print("RESULT_JSON:" + json.dumps(
+            {{k: v for k, v in r.items() if k != "traceback"}},
+            default=str))
+    """
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    line = [l for l in out.stdout.splitlines()
+            if l.startswith("RESULT_JSON:")][0]
+    return json.loads(line[len("RESULT_JSON:"):])
+
+
+@pytest.mark.slow
+class TestDryRun:
+    def test_decode_cell_single_pod(self):
+        r = _run_cell("granite-8b", "decode_32k", False)
+        assert r["status"] == "ok", r.get("error")
+        assert r["chips"] == 256
+        assert r["flops_per_device"] > 0
+        assert r["roofline"]["dominant"] in ("compute", "memory",
+                                             "collective")
+
+    def test_decode_cell_multi_pod(self):
+        r = _run_cell("granite-8b", "decode_32k", True)
+        assert r["status"] == "ok", r.get("error")
+        assert r["chips"] == 512
+
+    def test_long_context_ssm_cell(self):
+        r = _run_cell("falcon-mamba-7b", "long_500k", False)
+        assert r["status"] == "ok", r.get("error")
+
+    def test_long_context_skip_for_full_attention(self):
+        r = _run_cell("granite-8b", "long_500k", False)
+        assert r["status"] == "skipped"
+        assert "full-attention" in r["reason"]

@@ -1,0 +1,42 @@
+"""Examples must run end-to-end (subprocess smoke, reduced sizes)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _run(script, *args, timeout=600):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(ROOT, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    out = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "examples", script), *args],
+        capture_output=True, text=True, env=env, timeout=timeout)
+    assert out.returncode == 0, out.stderr[-2000:]
+    return out.stdout
+
+
+@pytest.mark.slow
+class TestExamples:
+    def test_quickstart(self):
+        out = _run("quickstart.py")
+        assert "identical=True" in out
+        assert "selected" in out
+
+    def test_analytics_server(self):
+        out = _run("analytics_server.py", "--window", "6",
+                   "--scale-rows", "20000")
+        assert "aggregate ratio" in out
+
+    def test_llm_serving_mqo(self):
+        out = _run("llm_serving_mqo.py", "--requests", "6")
+        assert "generations identical: True" in out
+
+    def test_train_lm(self):
+        out = _run("train_lm.py", "--steps", "40", "--width", "128",
+                   "--layers", "2", "--seq-len", "128", "--batch", "4",
+                   "--ckpt-dir", "/tmp/test_train_lm_ex")
+        assert "improved" in out

@@ -1,0 +1,176 @@
+"""End-to-end MQO invariants.
+
+The system's core guarantee: for ANY batch of queries and ANY memory
+budget, the MQO-rewritten batch produces EXACTLY the same result
+multisets as independent execution — worksharing must never change
+semantics.  Property-tested over random schemas/predicates/workloads.
+"""
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from conftest import build_session, hr_queries
+from repro.relational import (I32, STR, F32, Schema, Session, expr as E,
+                              logical as L, make_storage)
+
+
+def _assert_batches_equal(base, opt):
+    assert len(base.results) == len(opt.results)
+    for i, (b, o) in enumerate(zip(base.results, opt.results)):
+        assert b.table.row_multiset() == o.table.row_multiset(), \
+            f"query {i} diverged under MQO"
+
+
+class TestRunningExample:
+    """The paper's §3 example: 3 HR queries, 4 SEs (ψ1..ψ4)."""
+
+    def test_identifies_paper_ses(self, hr_session):
+        res = hr_session.run_batch(hr_queries(hr_session), mqo=True)
+        r = res.mqo.report
+        assert r.n_ses >= 4      # ψ1..ψ4 (plus scan-level SEs)
+        assert r.n_selected >= 1
+        assert r.selected_weight <= r.budget
+
+    @pytest.mark.parametrize("budget_kb", [1, 64, 1024, 1 << 20])
+    def test_results_identical_any_budget(self, hr_session, budget_kb):
+        qs = hr_queries(hr_session)
+        base = hr_session.run_batch(qs, mqo=False)
+        opt = hr_session.run_batch(qs, mqo=True,
+                                   budget_bytes=budget_kb * 1024)
+        _assert_batches_equal(base, opt)
+
+    def test_csv_format_identical(self, hr_data):
+        sess = build_session(hr_data, fmt="csv")
+        qs = hr_queries(sess)
+        base = sess.run_batch(qs, mqo=False)
+        opt = sess.run_batch(qs, mqo=True)
+        _assert_batches_equal(base, opt)
+
+    def test_fullcache_baseline_identical(self, hr_session):
+        qs = hr_queries(hr_session)
+        base = hr_session.run_batch(qs, mqo=False)
+        fc = hr_session.run_batch_fullcache(qs)
+        _assert_batches_equal(base, fc)
+
+    def test_budget_respected(self, hr_session):
+        res = hr_session.run_batch(hr_queries(hr_session), mqo=True,
+                                   budget_bytes=256 * 1024)
+        assert res.mqo.report.selected_weight <= 256 * 1024
+
+
+class TestExtractionSafety:
+    """Divergent filters below aggregates/limits must not be merged."""
+
+    def test_aggregate_above_divergent_filters(self, hr_session):
+        sal = hr_session.table("salaries")
+        q1 = (sal.filter(E.cmp("salary", ">", 50_000))
+              .groupby("from_year").agg(("n", "count", "")))
+        q2 = (sal.filter(E.cmp("salary", ">", 20_000))
+              .groupby("from_year").agg(("n", "count", "")))
+        base = hr_session.run_batch([q1, q2], mqo=False)
+        opt = hr_session.run_batch([q1, q2], mqo=True)
+        _assert_batches_equal(base, opt)
+
+    def test_equal_aggregates_do_share(self, hr_session):
+        sal = hr_session.table("salaries")
+
+        def q():
+            return (sal.filter(E.cmp("salary", ">", 50_000))
+                    .groupby("from_year").agg(("n", "count", "")))
+
+        res = hr_session.run_batch([q(), q()], mqo=True)
+        assert res.mqo.report.n_selected >= 1
+        _assert_batches_equal(hr_session.run_batch([q(), q()], mqo=False),
+                              res)
+
+    def test_limit_above_divergent_filters(self, hr_session):
+        sal = hr_session.table("salaries")
+        q1 = sal.filter(E.cmp("salary", ">", 60_000)).sort("salary").limit(5)
+        q2 = sal.filter(E.cmp("salary", ">", 10_000)).sort("salary").limit(5)
+        base = hr_session.run_batch([q1, q2], mqo=False)
+        opt = hr_session.run_batch([q1, q2], mqo=True)
+        # limits have unspecified tie order; counts must match and each
+        # result must still satisfy its own predicate
+        for b, o in zip(base.results, opt.results):
+            assert b.table.nrows == o.table.nrows
+
+
+# ---------------------------------------------------------------------------
+# property-based workload fuzzing
+# ---------------------------------------------------------------------------
+_COLS = ["c0", "c1", "c2"]
+
+
+@st.composite
+def _pred(draw, depth=0):
+    kind = draw(st.sampled_from(
+        ["cmp", "cmp", "cmp", "and", "or"] if depth < 2 else ["cmp"]))
+    if kind == "cmp":
+        return E.cmp(draw(st.sampled_from(_COLS)),
+                     draw(st.sampled_from(["<", "<=", ">", ">=", "==",
+                                           "!="])),
+                     int(draw(st.integers(0, 60))))
+    parts = draw(st.lists(_pred(depth=depth + 1), min_size=2, max_size=3))
+    return (E.and_ if kind == "and" else E.or_)(*parts)
+
+
+@st.composite
+def _query(draw):
+    base = L.scan("ft", _FUZZ_SCHEMA)
+    q = base.filter(draw(_pred()))
+    if draw(st.booleans()):
+        cols = draw(st.lists(st.sampled_from(_COLS + ["c3"]), min_size=1,
+                             max_size=4, unique=True))
+        q = q.project(*cols)
+    shape = draw(st.sampled_from(["plain", "plain", "agg", "sort", "join"]))
+    if shape == "agg" and q.schema.has("c0"):
+        aggs = [("n", "count", "")]
+        if q.schema.has("c3"):
+            aggs.append(("s3", "sum", "c3"))
+        q = q.groupby("c0").agg(*aggs)
+    elif shape == "sort" and q.schema.has("c1"):
+        q = q.sort("c1", desc=draw(st.booleans()))
+    elif shape == "join" and q.schema.has("c0"):
+        other = L.scan("dim", _DIM_SCHEMA).filter(
+            E.cmp("d1", draw(st.sampled_from([">", "<"])),
+                  int(draw(st.integers(0, 60)))))
+        q = q.join(other, "c0", "d0")
+    return q
+
+
+_FUZZ_SCHEMA = Schema.of(("c0", I32), ("c1", I32), ("c2", I32),
+                         ("c3", I32))
+_DIM_SCHEMA = Schema.of(("d0", I32), ("d1", I32))
+
+
+@pytest.fixture(scope="module")
+def fuzz_session():
+    rng = np.random.default_rng(42)
+    n, nd = 800, 64
+    fact = {c: rng.integers(0, 64, n).astype(np.int32) for c in
+            ["c0", "c1", "c2", "c3"]}
+    dim = {"d0": np.arange(nd, dtype=np.int32),
+           "d1": rng.integers(0, 64, nd).astype(np.int32)}
+    sess = Session(budget_bytes=1 << 24)
+    st1, _ = make_storage("ft", _FUZZ_SCHEMA, n, "columnar", cols=fact)
+    st2, _ = make_storage("dim", _DIM_SCHEMA, nd, "columnar", cols=dim)
+    sess.register(st1)
+    sess.register(st2)
+    return sess
+
+
+class TestPropertyMQONeverChangesResults:
+    @settings(max_examples=25, deadline=None,
+              suppress_health_check=list(HealthCheck))
+    @given(queries=st.lists(_query(), min_size=2, max_size=5),
+           budget_log2=st.integers(10, 24))
+    def test_rewritten_equals_baseline(self, fuzz_session, queries,
+                                       budget_log2):
+        base = fuzz_session.run_batch(queries, mqo=False)
+        opt = fuzz_session.run_batch(queries, mqo=True,
+                                     budget_bytes=1 << budget_log2)
+        for i, (b, o) in enumerate(zip(base.results, opt.results)):
+            assert b.table.row_multiset() == o.table.row_multiset(), \
+                f"query {i} diverged (budget=2^{budget_log2})\n" + \
+                L.explain(queries[i])
+        assert opt.mqo.report.selected_weight <= (1 << budget_log2)

@@ -1,0 +1,86 @@
+"""Roofline machinery: HLO collective parsing + term math."""
+import pytest
+
+from repro.launch.roofline import (HBM_BW, ICI_BW, PEAK_FLOPS,
+                                   collective_bytes_from_hlo,
+                                   roofline_terms)
+
+HLO = """
+HloModule jit_step
+  %x = f32[1024,512]{1,0} parameter(0)
+  %all-reduce.5 = f32[1024,512]{1,0} all-reduce(%x), replica_groups={}
+  %ag = bf16[64,128]{1,0} all-gather(%y), dimensions={0}
+  %rs.2 = f32[32,32]{1,0} reduce-scatter(%z), dimensions={0}
+  %a2a = bf16[16,16]{1,0} all-to-all(%w), dimensions={1}
+  %cp = u8[100]{0} collective-permute(%v), source_target_pairs={{0,1}}
+  %dot.3 = f32[10,10]{1,0} dot(%a, %b)   // not a collective
+  %note = f32[9] add(%c, %d), metadata={op_name="all-reduce-lookalike"}
+"""
+
+
+class TestCollectiveParser:
+    def test_bytes_by_op(self):
+        got = collective_bytes_from_hlo(HLO)
+        assert got["by_op"]["all-reduce"] == 1024 * 512 * 4
+        assert got["by_op"]["all-gather"] == 64 * 128 * 2
+        assert got["by_op"]["reduce-scatter"] == 32 * 32 * 4
+        assert got["by_op"]["all-to-all"] == 16 * 16 * 2
+        assert got["by_op"]["collective-permute"] == 100
+        assert got["total"] == sum(got["by_op"].values())
+
+    def test_non_collectives_ignored(self):
+        got = collective_bytes_from_hlo(HLO)
+        assert got["op_counts"] == {"all-reduce": 1, "all-gather": 1,
+                                    "reduce-scatter": 1, "all-to-all": 1,
+                                    "collective-permute": 1}
+
+    def test_async_start_variant(self):
+        hlo = "%ar = f32[8]{0} all-reduce-start(%x), replica_groups={}"
+        got = collective_bytes_from_hlo(hlo)
+        assert got["by_op"]["all-reduce"] == 32
+
+    def test_empty(self):
+        assert collective_bytes_from_hlo("")["total"] == 0
+
+
+class TestRooflineTerms:
+    def _cell(self, flops, bytes_, coll, chips=256, active=1e9,
+              tokens=1e6, kind="train"):
+        return {"flops_per_device": flops,
+                "bytes_accessed_per_device": bytes_,
+                "collective_bytes_per_device": coll, "chips": chips,
+                "params_active": active, "tokens_per_step": tokens,
+                "step_kind": kind}
+
+    def test_term_math(self):
+        r = roofline_terms(self._cell(PEAK_FLOPS, HBM_BW, ICI_BW))
+        assert r["compute_s"] == pytest.approx(1.0)
+        assert r["memory_s"] == pytest.approx(1.0)
+        assert r["collective_s"] == pytest.approx(1.0)
+
+    def test_dominant_selection(self):
+        r = roofline_terms(self._cell(PEAK_FLOPS, HBM_BW * 3, ICI_BW))
+        assert r["dominant"] == "memory"
+        r = roofline_terms(self._cell(PEAK_FLOPS * 5, HBM_BW, ICI_BW))
+        assert r["dominant"] == "compute"
+        r = roofline_terms(self._cell(PEAK_FLOPS, HBM_BW, ICI_BW * 9))
+        assert r["dominant"] == "collective"
+
+    def test_useful_ratio(self):
+        # MODEL_FLOPS = 6*N*D for train; per-device = /chips
+        cell = self._cell(flops=6e9 * 1e6 * 1 / 256, bytes_=1, coll=1,
+                          active=1e9, tokens=1e6)
+        r = roofline_terms(cell)
+        assert r["useful_flops_ratio"] == pytest.approx(1.0)
+
+    def test_inference_multiplier(self):
+        train = roofline_terms(self._cell(1e12, 1, 1, kind="train"))
+        serve = roofline_terms(self._cell(1e12, 1, 1, kind="decode"))
+        assert train["model_flops_total"] == 3 * serve["model_flops_total"]
+
+    def test_mfu_at_roofline_is_one(self):
+        # perfectly useful compute-bound cell => MFU == 1
+        flops = 6e9 * 1e6 / 256
+        cell = self._cell(flops=flops, bytes_=0, coll=0)
+        r = roofline_terms(cell)
+        assert r["roofline_fraction_mfu"] == pytest.approx(1.0)

@@ -1,0 +1,145 @@
+"""Serving-layer prefix MQO: exactness, admission, budgets, arch weights."""
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.model import init_params
+from repro.serving.costs import ServingCostModel
+from repro.serving.engine import ServingEngine
+from repro.serving.request import (GenerationRequest, build_chain,
+                                   identify_shared_prefixes, plan_requests)
+
+RNG = np.random.default_rng(11)
+
+
+def _cfg(name="granite-8b-smoke"):
+    return replace(get_config(name), n_prefix_tokens=0)
+
+
+def _requests(cfg, n_shared=3, shared_len=96, tail=12, seed=0):
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, cfg.vocab_size, shared_len)
+    reqs = []
+    for i in range(n_shared):
+        p = np.concatenate([shared,
+                            rng.integers(0, cfg.vocab_size, tail + i)])
+        reqs.append(GenerationRequest(i, p.astype(np.int32), 4))
+    reqs.append(GenerationRequest(99, rng.integers(
+        0, cfg.vocab_size, 40).astype(np.int32), 4))
+    return reqs
+
+
+class TestPrefixIdentification:
+    def test_chain_blocks_and_tail(self):
+        chain, tail = build_chain(np.arange(150, dtype=np.int32), 64)
+        assert chain.n_tokens == 128 and len(tail) == 22
+        assert chain.depth == 1
+
+    def test_shared_prefix_found_at_every_depth(self):
+        cfg = _cfg()
+        reqs = plan_requests(_requests(cfg, shared_len=128), 32)
+        ses = identify_shared_prefixes(reqs, k=2)
+        lens = sorted(se.occurrences[0].node.n_tokens for se in ses)
+        assert lens == [32, 64, 96, 128]
+
+    def test_distinct_prompts_share_nothing(self):
+        cfg = _cfg()
+        rng = np.random.default_rng(1)
+        reqs = plan_requests([
+            GenerationRequest(i, rng.integers(
+                0, cfg.vocab_size, 80).astype(np.int32), 2)
+            for i in range(4)], 32)
+        assert identify_shared_prefixes(reqs, k=2) == []
+
+
+class TestEngineExactness:
+    @pytest.mark.parametrize("budget", [1 << 14, 1 << 22])
+    def test_generations_identical_with_mqo(self, budget):
+        cfg = _cfg()
+        params = init_params(cfg, 0)
+        eng = ServingEngine(cfg, params, pool_budget_bytes=budget,
+                            block_size=32, max_len=192)
+
+        def mk():
+            return [GenerationRequest(r.request_id, r.prompt.copy(),
+                                      r.max_new_tokens)
+                    for r in _requests(cfg)]
+
+        base, _ = eng.run_batch(mk(), mqo=False)
+        opt, rep = eng.run_batch(mk(), mqo=True)
+        assert all((a == b).all() for a, b in zip(base, opt))
+        assert rep.pool_used <= budget
+
+    def test_prefill_savings_on_shared_workload(self):
+        cfg = _cfg()
+        params = init_params(cfg, 0)
+        eng = ServingEngine(cfg, params, pool_budget_bytes=1 << 22,
+                            block_size=32, max_len=192)
+        _, rep = eng.run_batch(_requests(cfg, n_shared=4), mqo=True)
+        assert rep.tokens_prefilled < rep.tokens_prefilled_baseline
+        assert rep.n_selected >= 1
+
+    def test_ssm_arch_prefix_caching(self):
+        cfg = _cfg("falcon-mamba-7b-smoke")
+        params = init_params(cfg, 0)
+        eng = ServingEngine(cfg, params, pool_budget_bytes=1 << 20,
+                            block_size=32, max_len=192)
+
+        def mk():
+            return [GenerationRequest(r.request_id, r.prompt.copy(),
+                                      r.max_new_tokens)
+                    for r in _requests(cfg)]
+
+        base, _ = eng.run_batch(mk(), mqo=False)
+        opt, rep = eng.run_batch(mk(), mqo=True)
+        assert all((a == b).all() for a, b in zip(base, opt))
+        # SSM state is O(1): the whole shared prefix costs the same
+        # bytes as a single block
+        cm = ServingCostModel(cfg)
+        assert cm.state_bytes(1000) == cm.state_bytes(10)
+
+
+class TestArchWeights:
+    def test_mla_lighter_than_gqa(self):
+        gqa = ServingCostModel(get_config("granite-8b"))
+        mla = ServingCostModel(get_config("deepseek-v2-236b"))
+        n = 4096
+        per_layer_gqa = gqa.state_bytes(n) / 36
+        per_layer_mla = mla.state_bytes(n) / 60
+        # granite GQA (kv=8, hd=128): 4096 B/token/layer; deepseek MLA
+        # latent: 1152 B/token/layer (~3.6x; vs its own 128-head GQA
+        # equivalent it is ~57x)
+        assert per_layer_mla < per_layer_gqa / 3
+
+    def test_local_window_clips_weight(self):
+        cm = ServingCostModel(get_config("gemma3-12b"))
+        # 5/6 of layers are window-clipped: doubling a long prefix must
+        # grow bytes sub-linearly
+        b1, b2 = cm.state_bytes(8192), cm.state_bytes(16384)
+        # 40 of 48 layers are window-clipped constants => clearly
+        # sub-linear growth (a pure-GQA arch would give exactly 2.0)
+        assert b2 < 1.7 * b1
+
+    def test_value_increases_with_consumers(self):
+        """Paper Eq. 3: v(Ω) increases in m."""
+        from repro.core.costmodel import price_ce
+        from repro.core.covering import build_covering_expressions
+
+        cfg = _cfg()
+        reqs6 = plan_requests(_requests(cfg, n_shared=6), 32)
+        ses = identify_shared_prefixes(reqs6, k=2)
+        ces = build_covering_expressions(ses)
+        cm = ServingCostModel(cfg)
+        for ce in ces:
+            price_ce(ce, cm)
+        by_m = {}
+        for ce in ces:
+            by_m.setdefault(ce.se.occurrences[0].node.n_tokens, ce)
+        # same prefix with more consumers has higher value
+        ce = ces[0]
+        v_before = ce.value
+        ce.se.occurrences = ce.se.occurrences * 2
+        price_ce(ce, cm)
+        assert ce.value > v_before
