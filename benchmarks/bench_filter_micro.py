@@ -14,15 +14,19 @@ from typing import Dict, List
 
 import numpy as np
 
-from common import csv_line, save_result
+from common import csv_line, fused_vs_eager, save_result
 from repro.relational import Session, expr as E, make_storage
 from repro.relational.datagen import generate_columns, people_schema
 
 
-def _mk_session(nrows: int, fmt: str, budget: int) -> Session:
+def _mk_session(nrows: int, fmt: str, budget: int,
+                fused: bool = True) -> Session:
     schema = people_schema()
     cols = generate_columns(schema, nrows, seed=0)
-    sess = Session(budget_bytes=budget)
+    # fused=False reproduces the seed eager executor (per-operator
+    # dispatch, host sync after every filter, no device scan cache)
+    sess = Session(budget_bytes=budget, fuse=fused, defer_sync=fused,
+                   use_scan_cache=fused)
     st, _ = make_storage("people", schema, nrows, fmt, cols=cols)
     sess.register(st, columnar_for_stats=cols)
     return sess
@@ -35,6 +39,27 @@ def _queries(sess: Session):
     q1 = people.filter(E.cmp("age", "<", 250))
     q2 = people.filter(E.cmp("age", ">", 750))
     return [q1, q2]
+
+
+def _chain_queries(sess: Session):
+    """Batched Scan→Filter→Project chains (the fusion-layer hot path)."""
+    people = sess.table("people")
+    return [
+        people.filter(E.cmp("age", "<", 250))
+              .project("name", "age", "salary"),
+        people.filter(E.cmp("age", ">", 750))
+              .project("name", "age", "salary"),
+        people.filter(E.and_(E.cmp("age", ">", 250),
+                             E.cmp("salary", "<", 500_000)))
+              .project("name", "salary"),
+        people.filter(E.cmp("d1", "<", 0.5)).project("age", "d1", "d2"),
+    ]
+
+
+def run_fused_vs_eager(**kw) -> Dict:
+    """ISSUE 1 acceptance: fusion layer on vs the seed eager path."""
+    return fused_vs_eager(_mk_session, _chain_queries,
+                          "filter_micro_fused", **kw)
 
 
 def run(sizes=(50_000, 100_000, 200_000), fmts=("csv", "columnar"),
@@ -89,6 +114,12 @@ def main() -> List[str]:
             f"ws/base={r['ws_over_base']:.2f};fc/base="
             f"{r['fc_over_base']:.2f};cache_frac={r['cache_frac_ws']:.2f}"
         ))
+    fused = run_fused_vs_eager()
+    for r in fused["rows"]:
+        lines.append(csv_line(
+            f"filter_micro_fused[{r['fmt']},{r['nrows']}]",
+            r["agg_fused"],
+            f"fused_speedup={r['fused_speedup']:.2f}"))
     return lines
 
 

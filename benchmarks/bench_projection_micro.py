@@ -10,15 +10,17 @@ from __future__ import annotations
 
 from typing import Dict, List
 
-from common import csv_line, save_result
-from repro.relational import Session, make_storage
+from common import csv_line, fused_vs_eager, save_result
+from repro.relational import Session, expr as E, make_storage
 from repro.relational.datagen import generate_columns, people_schema
 
 
-def _mk_session(nrows: int, fmt: str, budget: int) -> Session:
+def _mk_session(nrows: int, fmt: str, budget: int,
+                fused: bool = True) -> Session:
     schema = people_schema()
     cols = generate_columns(schema, nrows, seed=1)
-    sess = Session(budget_bytes=budget)
+    sess = Session(budget_bytes=budget, fuse=fused, defer_sync=fused,
+                   use_scan_cache=fused)
     st, _ = make_storage("people", schema, nrows, fmt, cols=cols)
     sess.register(st, columnar_for_stats=cols)
     return sess
@@ -29,6 +31,25 @@ def _queries(sess: Session):
     q1 = people.project("name", "age", "salary")
     q2 = people.project("name", "dept", "d1", "d2")
     return [q1, q2]
+
+
+def _chain_queries(sess: Session):
+    """Scan→Filter→Project chains over the projection workload's wide
+    column sets (the projection benchmark's fusion-layer variant)."""
+    people = sess.table("people")
+    return [
+        people.filter(E.cmp("salary", ">", 100))
+              .project("name", "age", "salary"),
+        people.filter(E.cmp("d1", "<", 0.75))
+              .project("name", "dept", "d1", "d2"),
+    ]
+
+
+def run_fused_vs_eager(**kw) -> Dict:
+    """ISSUE 1 acceptance: fusion layer on vs the seed eager path."""
+    kw.setdefault("fmts", ("columnar", "csv"))
+    return fused_vs_eager(_mk_session, _chain_queries,
+                          "projection_micro_fused", **kw)
 
 
 def run(sizes=(50_000, 100_000), fmts=("columnar", "csv"),
@@ -61,10 +82,17 @@ def run(sizes=(50_000, 100_000), fmts=("columnar", "csv"),
 
 def main() -> List[str]:
     out = run()
-    return [csv_line(
+    lines = [csv_line(
         f"projection_micro[{r['fmt']},{r['nrows']}]", r["agg_ws"],
         f"ws/base={r['ws_over_base']:.2f};ws/fc={r['ws_over_fc']:.2f}")
         for r in out["rows"]]
+    fused = run_fused_vs_eager()
+    for r in fused["rows"]:
+        lines.append(csv_line(
+            f"projection_micro_fused[{r['fmt']},{r['nrows']}]",
+            r["agg_fused"],
+            f"fused_speedup={r['fused_speedup']:.2f}"))
+    return lines
 
 
 if __name__ == "__main__":

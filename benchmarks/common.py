@@ -32,6 +32,41 @@ def timed(fn: Callable, warmup: int = 0, iters: int = 1) -> float:
     return (time.perf_counter() - t0) / iters
 
 
+def fused_vs_eager(mk_session, chain_queries, result_name: str,
+                   sizes=(100_000,), fmts=("csv", "columnar"),
+                   budget: int = 1 << 28, repeats: int = 3) -> Dict:
+    """Shared fused-vs-seed-eager harness (ISSUE 1 acceptance).
+
+    ``mk_session(nrows, fmt, budget, fused=...)`` builds a Session
+    (fused=False must reproduce the seed eager executor);
+    ``chain_queries(sess)`` builds the batched Scan→Filter→Project
+    chains.  Warmup pays jit compilation (and fills the fused session's
+    scan cache — the steady state under measurement); results are
+    asserted equal before timing.
+    """
+    out: Dict = {"rows": []}
+    for fmt in fmts:
+        for n in sizes:
+            eager = mk_session(n, fmt, budget, fused=False)
+            fused = mk_session(n, fmt, budget, fused=True)
+            qe, qf = chain_queries(eager), chain_queries(fused)
+            be = eager.run_batch(qe, mqo=False)
+            bf = fused.run_batch(qf, mqo=False)
+            for b, o in zip(be.results, bf.results):
+                assert b.table.row_multiset() == o.table.row_multiset()
+            t_eager = min(eager.run_batch(qe, mqo=False).total_seconds
+                          for _ in range(repeats))
+            t_fused = min(fused.run_batch(qf, mqo=False).total_seconds
+                          for _ in range(repeats))
+            out["rows"].append({
+                "fmt": fmt, "nrows": n,
+                "agg_eager": t_eager, "agg_fused": t_fused,
+                "fused_speedup": t_eager / max(t_fused, 1e-12),
+            })
+    save_result(result_name, out)
+    return out
+
+
 def percentile(xs: List[float], q: float) -> float:
     xs = sorted(xs)
     if not xs:

@@ -3,13 +3,22 @@
 Prints ``name,us_per_call,derived`` CSV lines.
 
   bench_filter_micro      paper Fig. 5–7  (filter queries, CSV+Parquet)
+                          + fused-vs-eager pipeline comparison (PR 1)
   bench_projection_micro  paper Fig. 8–9  (projection queries)
+                          + fused-vs-eager pipeline comparison (PR 1)
   bench_macro_tpcds       paper Fig. 3    (50-query TPC-DS CDF)
   bench_window            paper Fig. 4    (batching-window sweep)
   bench_mckp              paper §6.2      (optimizer overhead < 2 s)
   bench_serving_prefix    beyond-paper    (LLM prefix-cache MQO)
   roofline_report         assignment      (dry-run roofline terms)
+
+Usage:
+  python benchmarks/run.py                       # everything
+  python benchmarks/run.py bench_filter_micro bench_projection_micro \
+      --out BENCH_pr1.json                       # subset, merged JSON
 """
+import argparse
+import json
 import os
 import sys
 import time
@@ -29,10 +38,40 @@ MODULES = [
 ]
 
 
+def _merge_results(out_path: str, since: float) -> None:
+    """Collect the per-module JSONs written by common.save_result
+    DURING THIS RUN into a single file (the PR-over-PR perf trajectory
+    artifact); stale results from earlier runs are left out."""
+    from common import RESULTS_DIR
+
+    merged = {}
+    if os.path.isdir(RESULTS_DIR):
+        for fn in sorted(os.listdir(RESULTS_DIR)):
+            path = os.path.join(RESULTS_DIR, fn)
+            if fn.endswith(".json") and os.path.getmtime(path) >= since:
+                with open(path) as f:
+                    merged[fn[:-5]] = json.load(f)
+    with open(out_path, "w") as f:
+        json.dump(merged, f, indent=1)
+    print(f"# merged {len(merged)} result sets -> {out_path}", flush=True)
+
+
 def main() -> None:
+    parser = argparse.ArgumentParser()
+    parser.add_argument("modules", nargs="*",
+                        help=f"subset of {MODULES} (default: all)")
+    parser.add_argument("--out", default=None,
+                        help="merge reports/bench/*.json into this file")
+    args = parser.parse_args()
+    modules = args.modules or MODULES
+    unknown = [m for m in modules if m not in MODULES]
+    if unknown:
+        parser.error(f"unknown modules: {unknown}")
+
     print("name,us_per_call,derived")
+    t_start = time.time()
     failures = 0
-    for mod_name in MODULES:
+    for mod_name in modules:
         t0 = time.time()
         try:
             mod = __import__(mod_name)
@@ -44,6 +83,8 @@ def main() -> None:
             failures += 1
             print(f"# {mod_name} FAILED:", flush=True)
             traceback.print_exc()
+    if args.out:
+        _merge_results(args.out, since=t_start)
     if failures:
         sys.exit(1)
 

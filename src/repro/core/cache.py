@@ -91,12 +91,17 @@ class CacheManager:
     # -- maintenance ---------------------------------------------------------
     def evict(self, psi: bytes) -> None:
         entry = self._entries.pop(psi, None)
-        if entry is not None and not entry.spilled:
+        if entry is None:
+            return
+        if entry.spilled:
+            self.stats.spilled_bytes -= entry.nbytes
+        else:
             self.stats.used -= entry.nbytes
 
     def clear(self) -> None:
         self._entries.clear()
         self.stats.used = 0
+        self.stats.spilled_bytes = 0
 
     @property
     def used_bytes(self) -> int:

@@ -41,6 +41,14 @@ class CostModel(Protocol):
         """C_R(|τ|): cost of one consumer reading the cached output."""
         ...
 
+    # Optional: concrete models may also provide
+    #   extraction_cost(tree, member) -> float
+    # pricing the per-consumer residual work (re-applying the member's
+    # own filter/project over the cached CE output — one fused pipeline
+    # pass in the relational engine).  When absent, consumers are priced
+    # as m bare cache reads, which overvalues CEs whose members diverge
+    # from the covering expression.
+
 
 def price_ce(ce: CoveringExpression, model: CostModel) -> CoveringExpression:
     """Fill ``value`` / ``weight`` of a CE in-place (returns it too)."""
@@ -48,7 +56,13 @@ def price_ce(ce: CoveringExpression, model: CostModel) -> CoveringExpression:
     exec_ce = model.execution_cost(ce.tree)
     write_c = model.write_cost(ce.tree)
     read_c = model.read_cost(ce.tree)
-    total_ce = exec_ce + write_c + ce.m * read_c
+    extraction = getattr(model, "extraction_cost", None)
+    if extraction is not None:
+        extract_c = sum(extraction(ce.tree, o.node)
+                        for o in ce.se.occurrences)
+    else:
+        extract_c = 0.0
+    total_ce = exec_ce + write_c + ce.m * read_c + extract_c
     ce.value = unshared - total_ce
     ce.weight = int(model.output_bytes(ce.tree))
     ce.est_rows = int(model.output_rows(ce.tree))
@@ -57,6 +71,7 @@ def price_ce(ce: CoveringExpression, model: CostModel) -> CoveringExpression:
         "C_E_star": exec_ce,
         "C_W": write_c,
         "C_R": read_c,
+        "C_X": extract_c,
         "m": ce.m,
         "C_Omega": total_ce,
     }

@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .ref import _CMP, PredProgram
+from .ref import PredProgram, eval_program
 
 DEFAULT_BLOCK = 2048  # rows per block: 2048*4B = 8 KiB/column in VMEM
 
@@ -37,23 +37,10 @@ def _kernel_body(program: PredProgram, n_cols: int, block: int,
     bid = pl.program_id(0)
 
     cols = [r[...] for r in col_refs]
-    stack = []
-    for op in program:
-        if op[0] in _CMP:
-            _, idx, const = op
-            c = cols[idx]
-            stack.append(_CMP[op[0]](c, jnp.asarray(const, c.dtype)))
-        elif op[0] == "and":
-            b, a = stack.pop(), stack.pop()
-            stack.append(a & b)
-        elif op[0] == "or":
-            b, a = stack.pop(), stack.pop()
-            stack.append(a | b)
-        elif op[0] == "not":
-            stack.append(~stack.pop())
-        else:
-            raise ValueError(op)
-    (mask,) = stack
+    # the program is static, so the whole postfix evaluation unrolls at
+    # trace time into plain VPU element-wise ops (see ref.eval_program —
+    # shared with the XLA oracle so both paths agree bit-for-bit)
+    mask = eval_program(program, cols)
 
     # validity: global row index < nrows
     row0 = bid * block

@@ -22,14 +22,24 @@ _OPMAP = {"<": "lt", "<=": "le", ">": "gt", ">=": "ge", "==": "eq",
 
 def compile_predicate(pred: E.Expr, col_names: Sequence[str]
                       ) -> PredProgram:
-    """Relational Expr -> static postfix program over numeric columns."""
+    """Relational Expr -> static postfix program over numeric columns.
+
+    Supports col-const and col-col compares over i32/f32 columns (the
+    program IR promotes mixed dtypes to f32 — see ref.PredProgram).
+    String predicates raise ValueError; referencing a column outside
+    ``col_names`` (e.g. a string column in a col-col compare) raises
+    KeyError — callers pass the *numeric* column set so both cases fall
+    back to the XLA path.
+    """
     idx = {n: i for i, n in enumerate(col_names)}
     prog: List[tuple] = []
 
     def walk(e: E.Expr):
         if isinstance(e, E.Cmp):
             if isinstance(e.rhs, E.Col):
-                raise ValueError("col-col compare unsupported in kernel")
+                prog.append((_OPMAP[e.op] + "c", idx[e.col.name],
+                             idx[e.rhs.name]))
+                return
             v = e.rhs.value
             if isinstance(v, (bytes, str)):
                 raise ValueError("string predicates unsupported in kernel")
@@ -54,11 +64,21 @@ def compile_predicate(pred: E.Expr, col_names: Sequence[str]
     return tuple(prog)
 
 
-def kernel_supports(pred: E.Expr) -> bool:
+def kernel_supports(pred: E.Expr,
+                    numeric_cols: Sequence[str] | None = None) -> bool:
+    """Can this predicate run through the fused kernel?
+
+    Pass ``numeric_cols`` (the schema's i32/f32 column names) whenever
+    a schema is at hand: without it, a col-col compare over *string*
+    columns is indistinguishable from a numeric one (names carry no
+    dtype) and would be reported as supported.
+    """
+    cols = (list(numeric_cols) if numeric_cols is not None
+            else list(E.columns_of(pred)))
     try:
-        compile_predicate(pred, list(E.columns_of(pred)))
+        compile_predicate(pred, cols)
         return True
-    except ValueError:
+    except (ValueError, KeyError):
         return False
 
 

@@ -6,9 +6,15 @@ from typing import Sequence, Tuple
 import jax.numpy as jnp
 
 # Predicate program IR (static): postfix ops over a stack.
-#   ("lt"|"le"|"gt"|"ge"|"eq"|"ne", col_idx, const)  -> push col OP const
-#   ("and",) / ("or",)                               -> pop 2, push
-#   ("not",)                                         -> pop 1, push
+#   ("lt"|"le"|"gt"|"ge"|"eq"|"ne", col_idx, const)    -> push col OP const
+#   ("ltc"|"lec"|"gtc"|"gec"|"eqc"|"nec", ia, ib)      -> push col_a OP col_b
+#   ("and",) / ("or",)                                 -> pop 2, push
+#   ("not",)                                           -> pop 1, push
+# A float const with a fractional part against an integer column folds
+# into an exact integer compare at trace time (f32 promotion would be
+# inexact beyond 2^24); col-col compares over mixed dtypes promote both
+# sides to f32 (matching jnp's promotion in the XLA path — inexact
+# beyond 2^24, like every f32 compare in the engine).
 PredProgram = Tuple[tuple, ...]
 
 _CMP = {
@@ -16,6 +22,14 @@ _CMP = {
     "gt": lambda a, b: a > b, "ge": lambda a, b: a >= b,
     "eq": lambda a, b: a == b, "ne": lambda a, b: a != b,
 }
+
+# col-col variants -> base compare op
+_CMP_CC = {k + "c": k for k in _CMP}
+
+# kernel opcode <-> relational op symbol (for constant folding)
+_CMP_OPSYM = {"lt": "<", "le": "<=", "gt": ">", "ge": ">=",
+              "eq": "==", "ne": "!="}
+_SYM_CMP = {v: k for k, v in _CMP_OPSYM.items()}
 
 
 def eval_program(program: PredProgram, cols: Sequence[jnp.ndarray]
@@ -25,7 +39,26 @@ def eval_program(program: PredProgram, cols: Sequence[jnp.ndarray]
         if op[0] in _CMP:
             _, idx, const = op
             c = cols[idx]
+            if (isinstance(const, float) and not float(const).is_integer()
+                    and jnp.issubdtype(c.dtype, jnp.integer)):
+                from ...relational.expr import fold_int_cmp
+
+                folded = fold_int_cmp(_CMP_OPSYM[op[0]], float(const))
+                if folded[0] == "all":
+                    fill = jnp.ones_like if folded[1] else jnp.zeros_like
+                    stack.append(fill(c, dtype=jnp.bool_))
+                    continue
+                _, opsym, b = folded
+                stack.append(_CMP[_SYM_CMP[opsym]](c, jnp.asarray(
+                    b, c.dtype)))
+                continue
             stack.append(_CMP[op[0]](c, jnp.asarray(const, c.dtype)))
+        elif op[0] in _CMP_CC:
+            _, ia, ib = op
+            a, b = cols[ia], cols[ib]
+            if a.dtype != b.dtype:
+                a, b = a.astype(jnp.float32), b.astype(jnp.float32)
+            stack.append(_CMP[_CMP_CC[op[0]]](a, b))
         elif op[0] == "and":
             b, a = stack.pop(), stack.pop()
             stack.append(a & b)

@@ -61,17 +61,32 @@ class Session:
 
     def __init__(self, budget_bytes: int = 1 << 30,
                  sharding: Optional[jax.sharding.Sharding] = None,
-                 disk_latency_per_byte: float = 0.0):
+                 disk_latency_per_byte: float = 0.0,
+                 fuse: bool = True,
+                 defer_sync: bool = True,
+                 use_scan_cache: bool = True):
         self.catalog: Dict[str, TableStorage] = {}
         self.stats = StatsRegistry()
         self.budget = int(budget_bytes)
         self.sharding = sharding
         self.disk_latency_per_byte = disk_latency_per_byte
         self.cost_model = RelationalCostModel(self.stats)
+        # execution-path knobs (fuse=False, defer_sync=False,
+        # use_scan_cache=False reproduces the seed eager executor)
+        self.fuse = fuse
+        self.defer_sync = defer_sync
+        self.use_scan_cache = use_scan_cache
+        # (table, column, capacity, sharding) -> padded device array,
+        # shared by every batch this session runs
+        self._scan_cache: Dict[tuple, object] = {}
 
     # -- catalog management -------------------------------------------------
     def register(self, storage: TableStorage,
                  columnar_for_stats: Optional[Dict[str, np.ndarray]] = None):
+        # re-registering a name must not serve the old table's device
+        # buffers from the scan cache (keys lead with the table name)
+        for k in [k for k in self._scan_cache if k[0] == storage.name]:
+            del self._scan_cache[k]
         self.catalog[storage.name] = storage
         cols = storage.columnar if storage.columnar is not None \
             else columnar_for_stats
@@ -89,7 +104,15 @@ class Session:
         return ExecContext(
             catalog=self.catalog, cache=cache,
             sharding=self.sharding,
-            disk_latency_per_byte=self.disk_latency_per_byte)
+            disk_latency_per_byte=self.disk_latency_per_byte,
+            fuse=self.fuse,
+            defer_sync=self.defer_sync,
+            cost_model=self.cost_model,
+            scan_cache=self._scan_cache if self.use_scan_cache else None)
+
+    def clear_scan_cache(self) -> None:
+        """Drop memoized device scan buffers (e.g. after data changes)."""
+        self._scan_cache.clear()
 
     def run_one(self, plan: L.Node,
                 ctx: Optional[ExecContext] = None) -> QueryResult:
@@ -122,7 +145,7 @@ class Session:
         budget = budget_bytes if budget_bytes is not None else self.budget
         optimizer = MultiQueryOptimizer(
             cost_model=self.cost_model,
-            rewriter=RelationalRewriter(),
+            rewriter=RelationalRewriter(fuse_residuals=self.fuse),
             budget_bytes=budget,
             k=k,
             ce_transform=make_ce_transform(),

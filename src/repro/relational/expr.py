@@ -187,7 +187,21 @@ def eval_expr(e: Expr, columns: Dict[str, jnp.ndarray]) -> jnp.ndarray:
                 return ~eq
             raise ValueError(f"op {e.op} unsupported for string columns")
         else:
-            rhs = jnp.asarray(e.rhs.value, dtype=lhs.dtype)
+            v = e.rhs.value
+            if (isinstance(v, float) and not v.is_integer()
+                    and jnp.issubdtype(lhs.dtype, jnp.integer)):
+                # fractional threshold on an integer column: fold to an
+                # exact integer compare (truncating the const would flip
+                # <=/> at the edge; promoting to f32 is inexact > 2^24)
+                folded = fold_int_cmp(e.op, v)
+                if folded[0] == "all":
+                    fill = jnp.ones if folded[1] else jnp.zeros
+                    return fill((lhs.shape[0],), jnp.bool_)
+                _, op2, b = folded
+                e = Cmp(op2, e.col, Lit(b))
+                rhs = jnp.asarray(b, dtype=lhs.dtype)
+            else:
+                rhs = jnp.asarray(v, dtype=lhs.dtype)
         if lhs.ndim == 2 and isinstance(e.rhs, Col):
             eq = jnp.all(lhs == rhs, axis=1)
             return eq if e.op == "==" else ~eq
@@ -209,6 +223,30 @@ def eval_expr(e: Expr, columns: Dict[str, jnp.ndarray]) -> jnp.ndarray:
     if isinstance(e, Not):
         return ~eval_expr(e.part, columns)
     raise TypeError(type(e))
+
+
+def fold_int_cmp(op: str, v: float):
+    """Fold a fractional-threshold compare over an INTEGER column into
+    an exact integer compare (promoting the column to f32 would be
+    wrong beyond 2^24, where f32 cannot represent every int).
+
+    Returns ("all", bool) when the result is constant, else
+    ("cmp", op, int_bound) with the bound saturated to int32 range.
+    """
+    import math
+
+    if op == "==":
+        return ("all", False)   # an integer never equals a fraction
+    if op == "!=":
+        return ("all", True)
+    # c < 10.5 ⟺ c < 11;  c <= 10.5 ⟺ c <= 10;  etc.
+    b = math.ceil(v) if op in ("<", ">=") else math.floor(v)
+    lo, hi = -(2 ** 31), 2 ** 31 - 1
+    if b < lo:
+        return ("all", op in (">", ">="))
+    if b > hi:
+        return ("all", op in ("<", "<="))
+    return ("cmp", op, int(b))
 
 
 def pretty(e: Expr) -> str:

@@ -1,10 +1,22 @@
-"""Physical (eager, per-operator jitted) execution of logical plans.
+"""Physical execution of logical plans.
 
 The Spark analog: every operator materializes a fixed-shape distributed
 columnar relation (padded to a power-of-two capacity so jit caches hit
 across queries).  Orchestration is host-side Python — exactly like a
 Spark driver launching stages — while each operator body is a jitted
 JAX function that runs SPMD when the arrays carry a NamedSharding.
+
+Two execution paths (see ROADMAP.md "Execution paths"):
+
+  * **eager** — one jitted call per operator, host-synchronized row
+    counts after every data-dependent-shape operator (seed behavior;
+    ``ExecContext(fuse=False, defer_sync=False, scan_cache=None)``);
+  * **fused** (default) — ``relational.fuse`` collapses leaf→Filter*→
+    Project chains into single-dispatch :class:`FusedPipeline` nodes, a
+    device scan cache memoizes padded device columns across queries,
+    and cardinality-estimate-driven output capacities defer the host
+    sync (``int(count)``) until after the pipeline has dispatched,
+    recompacting only on estimate overflow.
 
 Storage formats (the paper's CSV vs Parquet axis):
   * ``csv``      — the table lives on "disk" (host memory) as one
@@ -28,9 +40,15 @@ import numpy as np
 from ..core.cache import CacheManager
 from . import expr as E
 from . import logical as L
+from .fuse import FusedPipeline, fuse_plan
 from .schema import Schema, Table, next_pow2
 
 I32_SENTINEL = np.int32(2**31 - 1)
+
+# deferred-sync capacity estimates get this much slack before the
+# overflow-recompact path triggers (estimation error is one-sided cheap:
+# undershoot costs a recompact, overshoot only pads the output)
+EST_HEADROOM = 1.25
 
 
 # ---------------------------------------------------------------------------
@@ -57,6 +75,7 @@ class ExecMetrics:
     bytes_read_disk: int = 0
     bytes_parsed: int = 0
     bytes_cached_read: int = 0
+    bytes_scan_cache_read: int = 0
     rows_processed: int = 0
     op_seconds: Dict[str, float] = field(default_factory=dict)
 
@@ -77,6 +96,28 @@ class ExecContext:
     # route numeric predicates through the Pallas filter-scan kernel
     # (TPU target; interpret mode on CPU — used by tests)
     use_pallas_filter: bool = False
+    # collapse Scan→Filter*→Project chains into single-dispatch
+    # FusedPipeline nodes (see relational.fuse)
+    fuse: bool = True
+    # device scan cache: (table, column, capacity, sharding) -> padded
+    # device array, shared across queries/batches (owned by the Session)
+    scan_cache: Optional[Dict[tuple, jnp.ndarray]] = None
+    # cardinality estimator (duck-typed RelationalCostModel) enabling
+    # deferred host synchronization: output capacities are picked from
+    # estimates so operator pipelines dispatch without a blocking
+    # int(count) per operator; the count validates afterwards and a
+    # recompact runs only on estimate overflow
+    cost_model: Optional[object] = None
+    defer_sync: bool = True
+
+    def estimate(self, kind: str, *args) -> Optional[int]:
+        """Cardinality estimate for deferred sync; None -> eager sync."""
+        if not self.defer_sync or self.cost_model is None:
+            return None
+        fn = getattr(self.cost_model, f"{kind}_estimate", None)
+        if fn is None:
+            return None
+        return int(fn(*args))
 
 
 # ---------------------------------------------------------------------------
@@ -126,6 +167,21 @@ def _compact(mask: jnp.ndarray, new_cap: int, *cols):
     """Bring mask-selected rows to the front; slice to new_cap."""
     order = jnp.argsort(~mask, stable=True)
     sel = order[:new_cap]
+    return tuple(jnp.take(c, sel, axis=0) for c in cols)
+
+
+@partial(jax.jit, static_argnames=("new_cap",))
+def _compact_nz(mask: jnp.ndarray, new_cap: int, *cols):
+    """O(n) compaction via nonzero (vs the argsort in ``_compact``).
+
+    ``nonzero`` returns selected row indices in ascending order — the
+    same live rows, in the same order, as the stable argsort of ~mask;
+    fill rows (beyond the selected count) simply repeat row 0, which is
+    compaction slack every operator already tolerates.  Used on the
+    fused/deferred paths; the plain ``_compact`` is kept as the seed
+    eager behavior.
+    """
+    (sel,) = jnp.nonzero(mask, size=new_cap, fill_value=0)
     return tuple(jnp.take(c, sel, axis=0) for c in cols)
 
 
@@ -199,17 +255,47 @@ def _device_put(arr: np.ndarray, ctx: ExecContext) -> jnp.ndarray:
     return jnp.asarray(arr)
 
 
+def _pad_rows(arr: np.ndarray, cap: int) -> np.ndarray:
+    """Zero-pad the row dim to ``cap`` (no copy when already there)."""
+    if cap == arr.shape[0]:
+        return arr
+    pad_shape = (cap - arr.shape[0],) + arr.shape[1:]
+    return np.concatenate([arr, np.zeros(pad_shape, arr.dtype)], 0)
+
+
+def _scan_cached(ctx: ExecContext, key: tuple, host_arr: np.ndarray,
+                 cap: int) -> jnp.ndarray:
+    """Padded device column, memoized per (table, col, cap, sharding).
+
+    Repeated scans across a batch (and across batches of the same
+    Session) skip both the host-side pad copy and the host→device
+    transfer — the dominant per-scan cost once plans are compiled.
+    """
+    sc = ctx.scan_cache
+    if sc is not None:
+        key = key + (cap, str(ctx.sharding))
+        hit = sc.get(key)
+        if hit is not None:
+            ctx.metrics.bytes_scan_cache_read += host_arr.nbytes
+            return hit
+    dev = _device_put(_pad_rows(host_arr, cap), ctx)
+    ctx.metrics.bytes_read_disk += host_arr.nbytes
+    if sc is not None:
+        sc[key] = dev
+    return dev
+
+
 def _exec_scan(node: L.Scan, ctx: ExecContext,
                needed: Tuple[str, ...]) -> Table:
     st = ctx.catalog[node.table]
     cap = next_pow2(st.nrows)
     cols: Dict[str, jnp.ndarray] = {}
     if st.fmt == "csv":
-        # must read the WHOLE row bytes (CSV is row-oriented)
-        raw_np = st.csv_bytes
-        pad = np.zeros((cap - st.nrows, raw_np.shape[1]), np.uint8)
-        raw = _device_put(np.concatenate([raw_np, pad], 0), ctx)
-        ctx.metrics.bytes_read_disk += raw_np.nbytes
+        # must read the WHOLE row bytes (CSV is row-oriented); only the
+        # raw byte matrix is memoized — the parse/typecast still runs
+        # per scan (it is the CSV format's intrinsic cost, and what the
+        # paper's covering-expression cache exists to avoid)
+        raw = _scan_cached(ctx, (st.name, "__csv__"), st.csv_bytes, cap)
         offsets = st.schema.csv_offsets()
         for name in needed:
             off, w = offsets[name]
@@ -224,13 +310,43 @@ def _exec_scan(node: L.Scan, ctx: ExecContext,
                 cols[name] = fieldb
     else:
         for name in needed:
-            arr = st.columnar[name]
-            ctx.metrics.bytes_read_disk += arr.nbytes
-            pad_shape = (cap - st.nrows,) + arr.shape[1:]
-            padded = np.concatenate([arr, np.zeros(pad_shape, arr.dtype)], 0)
-            cols[name] = _device_put(padded, ctx)
+            cols[name] = _scan_cached(ctx, (st.name, name),
+                                      st.columnar[name], cap)
     schema = st.schema.select(needed)
     return Table(schema, cols, st.nrows)
+
+
+def _est_cap(est: int, upper: int) -> int:
+    """Power-of-two output capacity from a cardinality estimate."""
+    cap = next_pow2(max(int(est * EST_HEADROOM), 1))
+    return max(1, min(cap, next_pow2(max(upper, 1))))
+
+
+def _deferred_dispatch(dispatch, est: int, upper: int, count):
+    """The deferred-sync pattern, shared by filter/join/aggregate and
+    the fused pipeline: dispatch at the estimate-sized capacity BEFORE
+    the host reads the true count, validate, and re-dispatch at the
+    exact size only on estimate overflow.  ``upper`` bounds the
+    *speculative* allocation (an overestimate must never allocate more
+    than the operator could legitimately produce — or, for joins, a
+    sane multiple of its inputs); the overflow re-dispatch uses the
+    true count, which by then is known to be a real requirement.
+
+    A large OVERestimate is also re-dispatched at the tight size (one
+    pow2 step of slack is tolerated): the padded buffer would otherwise
+    outlive the operator — returned as a query result or, worse,
+    admitted to the CE cache at its padded nbytes, evicting entries the
+    knapsack believed would fit.
+
+    Returns (dispatch result, int count).
+    """
+    cap = _est_cap(est, upper)
+    out = dispatch(cap)
+    n = int(count)
+    tight = next_pow2(max(n, 1))
+    if n > cap or cap > 2 * tight:
+        out = dispatch(tight)
+    return out, n
 
 
 def _exec_filter(pred: E.Expr, child: Table, ctx: ExecContext) -> Table:
@@ -243,9 +359,15 @@ def _exec_filter(pred: E.Expr, child: Table, ctx: ExecContext) -> Table:
         fn = _cached(key, lambda: _pred_mask_fn(key, pred, names))
         mask, count = fn(jnp.int32(child.nrows),
                          *[child.columns[n] for n in names])
-    count = int(count)
-    new_cap = next_pow2(max(count, 1))
-    out = _compact(mask, new_cap, *[child.columns[n] for n in names])
+    cols = [child.columns[n] for n in names]
+    est = ctx.estimate("filter", pred, child.nrows)
+    if est is not None:
+        out, count = _deferred_dispatch(
+            lambda cap: _compact_nz(mask, cap, *cols),
+            est, child.capacity, count)
+    else:
+        count = int(count)
+        out = _compact(mask, next_pow2(max(count, 1)), *cols)
     ctx.metrics.rows_processed += child.nrows
     return Table(child.schema, dict(zip(names, out)), count)
 
@@ -265,15 +387,28 @@ def _exec_join(node: L.Join, left: Table, right: Table,
     # searchsorted never matches padding.
     order, rk_sorted = _join_build(rk, jnp.int32(right.nrows))
     lo, m, total = _join_probe(lk, rk_sorted, jnp.int32(left.nrows))
-    total = int(total)
-    out_cap = next_pow2(max(total, 1))
-    li, ri = _join_expand(lo, m, out_cap)
-    cols: Dict[str, jnp.ndarray] = {}
-    for n in left.schema.names:
-        cols[n] = jnp.take(left.columns[n], li, axis=0)
-    for n in right.schema.names:
-        src = jnp.take(right.columns[n], order, axis=0)
-        cols[n] = jnp.take(src, ri, axis=0)
+
+    def gather(out_cap: int) -> Dict[str, jnp.ndarray]:
+        li, ri = _join_expand(lo, m, out_cap)
+        out: Dict[str, jnp.ndarray] = {}
+        for n in left.schema.names:
+            out[n] = jnp.take(left.columns[n], li, axis=0)
+        for n in right.schema.names:
+            src = jnp.take(right.columns[n], order, axis=0)
+            out[n] = jnp.take(src, ri, axis=0)
+        return out
+
+    est = ctx.estimate("join", (lc, rc), left.nrows, right.nrows)
+    if est is not None:
+        # bound the speculative gather at a small multiple of the
+        # larger input — a runaway NDV-based estimate (e.g. join keys
+        # with no stats) must not allocate |L|x|R|-sized arrays; a true
+        # output beyond the bound just takes the overflow re-gather
+        upper = 4 * max(left.nrows, right.nrows, 1)
+        cols, total = _deferred_dispatch(gather, est, upper, total)
+    else:
+        total = int(total)
+        cols = gather(next_pow2(max(total, 1)))
     ctx.metrics.rows_processed += left.nrows + right.nrows
     return Table(left.schema.concat(right.schema), cols, total)
 
@@ -293,8 +428,9 @@ def _exec_aggregate(node: L.Aggregate, child: Table,
 
     order, gid, sorted_valid, n_groups = _agg_seg_ids(
         jnp.int32(child.nrows), *keys)
-    n_groups = int(n_groups)
-    cap = next_pow2(max(n_groups, 1))
+
+    est = ctx.estimate("group", node.group_by, child.nrows)
+    cap = 1  # rebound by run_reduce before any trace reads it
 
     fns = tuple(fn for _, fn, _ in node.aggs)
 
@@ -340,10 +476,25 @@ def _exec_aggregate(node: L.Aggregate, child: Table,
 
     vals = tuple(child.columns[c if c else node.group_by[0]]
                  for _, fn, c in node.aggs)
-    reduce_key = ("agg_reduce", fns, cap, n,
-                  tuple(str(v.dtype) for v in vals))
-    reduce_all = _cached(reduce_key, make_reduce)
-    outs, first = reduce_all(order, gid, sorted_valid, *vals)
+
+    def run_reduce(cap_: int):
+        nonlocal cap
+        cap = cap_   # read by make_reduce's trace below
+        reduce_key = ("agg_reduce", fns, cap_, n,
+                      tuple(str(v.dtype) for v in vals))
+        reduce_all = _cached(reduce_key, make_reduce)
+        return reduce_all(order, gid, sorted_valid, *vals)
+
+    if est is not None:
+        # deferred sync: size the segment reduction from the NDV
+        # estimate and dispatch it before reading the true group count;
+        # group ids beyond the capacity are scatter-dropped, so an
+        # underestimate only triggers the overflow re-reduce
+        (outs, first), n_groups = _deferred_dispatch(
+            run_reduce, est, child.nrows, n_groups)
+    else:
+        n_groups = int(n_groups)
+        outs, first = run_reduce(next_pow2(max(n_groups, 1)))
 
     cols: Dict[str, jnp.ndarray] = {}
     safe_first = jnp.minimum(first, n - 1)
@@ -392,7 +543,9 @@ def _exec_union(left: Table, right: Table, ctx: ExecContext) -> Table:
 def _try_pallas_filter(pred: E.Expr, child: Table):
     """Route a numeric predicate through the fused filter-scan kernel.
     Returns (mask, count) or (None, None) when unsupported (string
-    predicates / col-col compares stay on the XLA path)."""
+    predicates stay on the XLA path; numeric col-col compares and
+    fractional thresholds on integer columns compile — see
+    kernels.filter_project.ops.compile_predicate)."""
     from ..kernels.filter_project.ops import compile_predicate, filter_mask
 
     numeric = tuple(n for n, t in child.schema.fields
@@ -408,18 +561,110 @@ def _try_pallas_filter(pred: E.Expr, child: Table):
 
 
 # ---------------------------------------------------------------------------
+# fused pipelines (relational.fuse): leaf → Filter* → Project in ONE call
+# ---------------------------------------------------------------------------
+def _fused_fn(key, pred: E.Expr, in_names: Tuple[str, ...],
+              out_cols: Tuple[str, ...], new_cap: int):
+    """mask + count + compact + project as a single jitted function."""
+    def f(nrows, *cols):
+        columns = dict(zip(in_names, cols))
+        n = cols[0].shape[0]
+        mask = E.eval_expr(pred, columns) & (jnp.arange(n) < nrows)
+        count = jnp.sum(mask.astype(jnp.int32))
+        (sel,) = jnp.nonzero(mask, size=new_cap, fill_value=0)
+        outs = tuple(jnp.take(columns[c], sel, axis=0) for c in out_cols)
+        return mask, count, outs
+    return jax.jit(f)
+
+
+def _exec_fused(node: FusedPipeline, ctx: ExecContext) -> Table:
+    src, pred = node.source, node.pred
+    need = set(node.cols) | E.columns_of(pred)
+    if isinstance(src, L.Scan):
+        needed = tuple(n for n in src.schema.names if n in need)
+        child = _exec_scan(src, ctx, needed)
+    else:
+        table = _cached_scan_table(src, ctx)
+        child = table.select([n for n in src.schema.names
+                              if n in need and table.schema.has(n)])
+
+    if isinstance(pred, E.TrueExpr):
+        return child.select(node.cols)
+
+    in_names = child.schema.names
+    in_cols = [child.columns[n] for n in in_names]
+    est = ctx.estimate("filter", pred, child.nrows)
+    if est is not None and isinstance(src, L.CachedScan):
+        # residual over a covering relation: condition on the covering
+        # plan's selectivity (the CE output already passed the OR of
+        # member predicates, so base-table selectivities undershoot)
+        cov = ctx.cache_plans.get(src.psi)
+        sel_fn = getattr(ctx.cost_model, "plan_selectivity", None)
+        if cov is not None and sel_fn is not None:
+            est = min(child.nrows, int(est / sel_fn(cov)))
+    out_schema = node.schema
+
+    mask = count = None
+    if ctx.use_pallas_filter:
+        # kernel computes mask+count; only the data-dependent-shape
+        # compaction stays in XLA (see kernels.filter_project.kernel)
+        mask, count = _try_pallas_filter(pred, child)
+
+    def project_compact(new_cap: int):
+        return _compact_nz(mask, new_cap,
+                           *[child.columns[c] for c in node.cols])
+
+    if mask is not None:
+        if est is not None:
+            outs, count = _deferred_dispatch(
+                project_compact, est, child.capacity, count)
+        else:
+            count = int(count)
+            outs = project_compact(next_pow2(max(count, 1)))
+    elif est is not None:
+        # single dispatch: mask, count and the projected compaction all
+        # come out of one jitted call sized by the estimate
+        new_cap = _est_cap(est, child.capacity)
+        key = ("fused", E.canonical(pred), in_names, node.cols,
+               child.capacity, new_cap)
+        fn = _cached(key, lambda: _fused_fn(key, pred, in_names,
+                                            node.cols, new_cap))
+        mask, count, outs = fn(jnp.int32(child.nrows), *in_cols)
+        count = int(count)
+        tight = next_pow2(max(count, 1))
+        if count > new_cap or new_cap > 2 * tight:
+            # estimate overflow (or gross overshoot): recompact exactly
+            outs = project_compact(tight)
+    else:
+        # no estimator: two dispatches, but still no intermediate
+        # relation — only the output columns are ever compacted
+        key = ("mask", E.canonical(pred), in_names, child.capacity)
+        fn = _cached(key, lambda: _pred_mask_fn(key, pred, in_names))
+        mask, count = fn(jnp.int32(child.nrows), *in_cols)
+        count = int(count)
+        outs = project_compact(next_pow2(max(count, 1)))
+
+    ctx.metrics.rows_processed += child.nrows
+    return Table(out_schema, dict(zip(node.cols, outs)), count)
+
+
+# ---------------------------------------------------------------------------
 # the interpreter
 # ---------------------------------------------------------------------------
 def execute(node: L.Node, ctx: ExecContext) -> Table:
     from .stats import required_columns
 
+    if ctx.fuse:
+        node = fuse_plan(node)
     req = required_columns(node)
     return _exec(node, ctx, req)
 
 
 def _exec(node: L.Node, ctx: ExecContext, req) -> Table:
     t0 = time.perf_counter()
-    if isinstance(node, L.Scan):
+    if isinstance(node, FusedPipeline):
+        out = _exec_fused(node, ctx)
+    elif isinstance(node, L.Scan):
         needed = req.get(id(node), frozenset(node.schema.names))
         ordered = tuple(n for n in node.schema.names if n in needed)
         out = _exec_scan(node, ctx, ordered)
@@ -472,19 +717,26 @@ def _materialize_cache(node: L.Cache, ctx: ExecContext, req) -> Table:
     return table
 
 
-def _exec_cached_scan(node: L.CachedScan, ctx: ExecContext, req) -> Table:
+def _cached_scan_table(node: L.CachedScan, ctx: ExecContext) -> Table:
+    """The full covering relation behind a CachedScan (materializing on
+    first touch: Spark cache() is a transformation — §6.3 footnote 5)."""
     assert ctx.cache is not None
     table = ctx.cache.get(node.psi)
     if table is None:
-        # First consumer pays the materialization (Spark cache() is a
-        # transformation — paper §6.3 footnote 5).
         plan = ctx.cache_plans.get(node.psi)
         if plan is None:
             raise KeyError(f"no cache plan registered for ψ="
                            f"{node.psi.hex()[:12]}")
+        if ctx.fuse:
+            plan = fuse_plan(plan)
         table = _exec(plan, ctx, required_columns_of(plan))
     else:
         ctx.metrics.bytes_cached_read += table.nbytes
+    return table
+
+
+def _exec_cached_scan(node: L.CachedScan, ctx: ExecContext, req) -> Table:
+    table = _cached_scan_table(node, ctx)
     # present the cached covering relation under this node's schema
     return table.select([n for n in node.schema.names
                          if n in table.schema.names])

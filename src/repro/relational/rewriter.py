@@ -108,7 +108,18 @@ def _collect_divergent(covering: L.Node, member: L.Node,
 
 
 class RelationalRewriter:
-    """Implements repro.core.rewrite.Rewriter for relational plans."""
+    """Implements repro.core.rewrite.Rewriter for relational plans.
+
+    With ``fuse_residuals`` the extraction plan (CachedScan → Filter →
+    Project, the CE-consumer hot path) is emitted pre-collapsed into a
+    single FusedPipeline physical node, so every consumer re-reads the
+    cached covering relation with ONE dispatch instead of one per
+    residual operator.  Rewriting happens after fingerprinting, so the
+    physical node never perturbs ψ identities.
+    """
+
+    def __init__(self, fuse_residuals: bool = False):
+        self.fuse_residuals = fuse_residuals
 
     def make_cache_plan(self, ce: CoveringExpression) -> L.Node:
         return L.Cache(child=ce.tree, psi=ce.psi)
@@ -124,4 +135,8 @@ class RelationalRewriter:
             plan = L.Filter(child=plan, pred=E.and_(*preds))
         if tuple(plan.schema.names) != tuple(member.schema.names):
             plan = L.Project(child=plan, cols=tuple(member.schema.names))
+        if self.fuse_residuals:
+            from .fuse import fuse_plan
+
+            plan = fuse_plan(plan)
         return plan

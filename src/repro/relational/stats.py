@@ -21,6 +21,7 @@ import numpy as np
 
 from . import expr as E
 from . import logical as L
+from .fuse import FusedPipeline
 from .schema import Schema
 
 
@@ -184,6 +185,9 @@ def required_columns(root: L.Node) -> Dict[int, FrozenSet[str]]:
         elif isinstance(node, L.Union):
             down(node.left, needed)
             down(node.right, needed)
+        elif isinstance(node, FusedPipeline):
+            down(node.source,
+                 frozenset(node.cols) | E.columns_of(node.pred))
         # Scan / CachedScan: leaves
 
     down(root, frozenset(root.schema.names))
@@ -206,6 +210,10 @@ class CostConstants:
     net: float = 3.0e-9          # shuffle one byte across the interconnect
     cache_w: float = 1.2e-9      # write one byte into the RAM cache
     cache_r: float = 0.4e-9      # read one byte from the RAM cache
+    # fused-pipeline predicate term on one row: the fused path skips the
+    # per-operator intermediate relation and host sync, so a residual
+    # term is cheaper than an eager one (calibratable like the rest)
+    fused_cmp: float = 0.6e-9
 
 
 class RelationalCostModel:
@@ -226,6 +234,9 @@ class RelationalCostModel:
             return float(ts.nrows if ts else 1000)
         if isinstance(node, L.CachedScan):
             return 1000.0  # post-rewrite leaf; not priced
+        if isinstance(node, FusedPipeline):
+            return (self._rows(node.source)
+                    * selectivity(node.pred, self.reg))
         if isinstance(node, L.Filter):
             return self._rows(node.child) * selectivity(node.pred, self.reg)
         if isinstance(node, (L.Project, L.Sort, L.Cache)):
@@ -277,6 +288,13 @@ class RelationalCostModel:
             return col_bytes * c.io_col
         if isinstance(node, L.CachedScan):
             return 0.0
+        if isinstance(node, FusedPipeline):
+            # one pass over the source: every residual term is priced at
+            # the fused rate, plus the gather of the projected output
+            terms = max(_n_terms(node.pred), 1)
+            return (self._cost(node.source, req)
+                    + self._rows(node.source) * terms * c.fused_cmp
+                    + rows * node.schema.row_mem_bytes * c.cpu_copy)
         if isinstance(node, L.Filter):
             terms = _n_terms(node.pred)
             return (self._cost(node.child, req)
@@ -317,6 +335,54 @@ class RelationalCostModel:
     def read_cost(self, node: L.Node) -> float:
         return self.output_bytes(node) * self.c.cache_r
 
+    def extraction_cost(self, tree: L.Node, member: L.Node) -> float:
+        """Per-consumer residual cost of deriving ``member`` from the
+        cached covering relation (paper Eq. 2's C_R prices only the raw
+        byte read; a *divergent* consumer also re-applies its own
+        predicates — one fused pass over the CE output under the fused
+        executor).  Syntactically equal members extract by identity and
+        cost nothing."""
+        terms = _residual_terms(tree, member)
+        if terms == 0:
+            return 0.0
+        ce_rows = self._rows(tree)
+        gather = self.output_bytes(member) * self.c.cpu_copy
+        return ce_rows * terms * self.c.fused_cmp + gather
+
+    # ---- operator cardinality estimates (deferred-sync capacities) -------
+    def filter_estimate(self, pred: E.Expr, in_rows: int) -> int:
+        return max(0, int(in_rows * selectivity(pred, self.reg)))
+
+    def plan_selectivity(self, plan: L.Node) -> float:
+        """Combined selectivity of every filter in a plan — used to
+        CONDITION residual estimates over a cached covering relation:
+        base-table selectivities applied to CE-output rows would
+        systematically undershoot (the CE already filtered by the OR of
+        member predicates), forcing the overflow re-dispatch on exactly
+        the consumer hot path."""
+        s = 1.0
+        if isinstance(plan, (L.Filter, FusedPipeline)):
+            s *= selectivity(plan.pred, self.reg)
+        for c in plan.children:
+            s *= self.plan_selectivity(c)
+        return min(max(s, 1e-6), 1.0)
+
+    def join_estimate(self, on: Tuple[str, str], l_rows: int,
+                      r_rows: int) -> int:
+        lc, rc = on
+        ndv_l = self.reg.col(lc).ndv if self.reg.col(lc) else 100
+        ndv_r = self.reg.col(rc).ndv if self.reg.col(rc) else 100
+        denom = max(ndv_l, ndv_r, 1)
+        return max(1, int(l_rows * r_rows / denom))
+
+    def group_estimate(self, group_by: Tuple[str, ...],
+                       in_rows: int) -> int:
+        groups = 1.0
+        for g in group_by:
+            cs = self.reg.col(g)
+            groups *= cs.ndv if cs else 100
+        return max(1, int(min(in_rows, groups)))
+
 
 def _n_terms(e: E.Expr) -> int:
     if isinstance(e, E.Cmp):
@@ -326,3 +392,17 @@ def _n_terms(e: E.Expr) -> int:
     if isinstance(e, E.Not):
         return _n_terms(e.part)
     return 0
+
+
+def _residual_terms(tree: L.Node, member: L.Node) -> int:
+    """Predicate terms the member must re-apply over the CE output:
+    lock-step walk counting member filters whose predicate is wider in
+    the covering tree (cf. rewriter._collect_divergent; commutative
+    child alignment is skipped — this is an estimate, not a rewrite)."""
+    total = 0
+    if (isinstance(tree, L.Filter) and isinstance(member, L.Filter)
+            and E.canonical(member.pred) != E.canonical(tree.pred)):
+        total += _n_terms(member.pred)
+    for tc, mc in zip(tree.children, member.children):
+        total += _residual_terms(tc, mc)
+    return total

@@ -167,10 +167,19 @@ def tpcds_queries(sess: Session) -> List[L.Node]:
                   ("n", "count", "")))
         qs.append(q)
 
-    # F2 (10 queries): high-value sales scans with price thresholds
-    for thr in (50, 60, 70, 80, 90, 55, 65, 75, 85, 95):
+    # F2 (10 queries): high-value sales scans with price thresholds;
+    # the last two are loss-leader scans whose col-col compare now also
+    # routes through the fused filter kernel (postfix "ltc" ops)
+    for thr in (50, 60, 70, 80, 90, 55, 65, 75):
         q = (ss.filter(E.and_(E.cmp("ss_sales_price", ">", float(thr)),
                               E.cmp("ss_quantity", ">=", 10)))
+             .project("ss_item_sk", "ss_customer_sk", "ss_sales_price",
+                      "ss_net_profit"))
+        qs.append(q)
+    for min_qty in (10, 25):
+        q = (ss.filter(E.and_(E.col_cmp("ss_sales_price", "<",
+                                        "ss_wholesale_cost"),
+                              E.cmp("ss_quantity", ">=", min_qty)))
              .project("ss_item_sk", "ss_customer_sk", "ss_sales_price",
                       "ss_net_profit"))
         qs.append(q)

@@ -7,6 +7,8 @@ semantics.  Property-tested over random schemas/predicates/workloads.
 """
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import HealthCheck, given, settings, strategies as st
 
 from conftest import build_session, hr_queries

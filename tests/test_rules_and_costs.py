@@ -1,6 +1,8 @@
 """Single-query optimizer semantics + cost model properties (Eq. 1–3)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import HealthCheck, given, settings, strategies as st
 
 from oracle import execute_oracle, multiset
