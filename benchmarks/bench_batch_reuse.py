@@ -1,0 +1,91 @@
+"""Cross-batch cache reuse (ISSUE 2 acceptance): cold vs warm repeat.
+
+A recurring TPC-DS-style dashboard batch — the scan-dominated F2
+(high-value sales scans) + F5 (profitability scans) template families
+over the CSV fact table, under the paper's ~200 MB/s disk-read profile
+(§6.3) — is run twice on the same Session with cross-batch retention
+on.  The cold run pays disk reads, CSV parse and CE materialization;
+the warm repeat re-prices still-resident CEs as zero-weight knapsack
+items and serves scans/CEs from the unified memory hierarchy, so it
+pays only the per-query residuals.  Measured per eviction policy.
+
+Jit compilation is paid by a throwaway warmup session so cold-vs-warm
+isolates the memory-hierarchy effect (Sioulas et al. 2023: recompute
+across recurring batches dominates, not compilation).
+
+Acceptance: warm_speedup >= 1.5 with retention on.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from common import csv_line, save_result
+from repro.relational.tpcds import build_tpcds_session, tpcds_queries
+
+SCALE_ROWS = 120_000
+BUDGET = 1 << 30
+FMT = "csv"                 # parse is the shareable work CEs eliminate
+DISK_LATENCY = 5e-9         # paper §6.3 commodity-disk regime (~200 MB/s)
+
+
+def _dashboard(qs):
+    """The recurring scan-heavy batch: F2 (10) + F5 (6) queries."""
+    return qs[10:20] + qs[36:42]
+
+
+def _run_policy(policy: str, repeats: int = 3) -> Dict:
+    # pay jit compilation once, outside the measured sessions
+    warmup = build_tpcds_session(scale_rows=SCALE_ROWS, fmt=FMT,
+                                 budget_bytes=BUDGET, policy=policy)
+    warmup.run_batch(_dashboard(tpcds_queries(warmup)), mqo=True)
+
+    sess = build_tpcds_session(scale_rows=SCALE_ROWS, fmt=FMT,
+                               budget_bytes=BUDGET, policy=policy)
+    sess.disk_latency_per_byte = DISK_LATENCY
+    qs = _dashboard(tpcds_queries(sess))
+    cold = sess.run_batch(qs, mqo=True)
+    warm_runs = [sess.run_batch(qs, mqo=True) for _ in range(repeats)]
+    warm = min(warm_runs, key=lambda b: b.total_seconds)
+
+    base = sess.run_batch(qs, mqo=False)
+    for b, w in zip(base.results, warm.results):
+        assert b.table.row_multiset() == w.table.row_multiset()
+
+    return {
+        "policy": policy,
+        "n_queries": len(qs),
+        "cold_s": cold.total_seconds,
+        "warm_s": warm.total_seconds,
+        "warm_speedup": cold.total_seconds / max(warm.total_seconds, 1e-12),
+        "cold_selected": cold.mqo.report.n_selected,
+        "warm_resident": warm.mqo.report.n_resident,
+        "warm_selected_weight": warm.mqo.report.selected_weight,
+        "cache": {k: v for k, v in warm.cache_report.items()
+                  if k != "entries"},
+        "memory": {k: v for k, v in sess.memory.report().items()
+                   if k != "pools"},
+    }
+
+
+def run() -> Dict:
+    out = {"scale_rows": SCALE_ROWS, "fmt": FMT,
+           "disk_latency_per_byte": DISK_LATENCY,
+           "policies": [_run_policy(p) for p in ("lru", "benefit")]}
+    save_result("batch_reuse", out)
+    return out
+
+
+def main() -> List[str]:
+    out = run()
+    lines = []
+    for row in out["policies"]:
+        lines.append(csv_line(
+            f"batch_reuse[{row['policy']}]", row["warm_s"],
+            f"cold_s={row['cold_s']:.3f};warm_s={row['warm_s']:.3f};"
+            f"speedup={row['warm_speedup']:.2f};"
+            f"resident={row['warm_resident']}"))
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

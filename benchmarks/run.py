@@ -9,6 +9,8 @@ Prints ``name,us_per_call,derived`` CSV lines.
   bench_macro_tpcds       paper Fig. 3    (50-query TPC-DS CDF)
   bench_window            paper Fig. 4    (batching-window sweep)
   bench_mckp              paper §6.2      (optimizer overhead < 2 s)
+  bench_batch_reuse       beyond-paper    (cold vs warm repeat batch,
+                          cross-batch CE retention per policy — PR 2)
   bench_serving_prefix    beyond-paper    (LLM prefix-cache MQO)
   roofline_report         assignment      (dry-run roofline terms)
 
@@ -33,6 +35,7 @@ MODULES = [
     "bench_projection_micro",
     "bench_window",
     "bench_macro_tpcds",
+    "bench_batch_reuse",
     "bench_serving_prefix",
     "roofline_report",
 ]

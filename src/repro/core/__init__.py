@@ -4,7 +4,7 @@
 # layer (beyond-paper prefix-cache MQO).
 from .cache import CacheEntry, CacheManager, CacheStats
 from .candidates import KnapsackItem, generate_knapsack_items
-from .costmodel import CostModel, price_ce, price_ces
+from .costmodel import CostModel, price_ce, price_ces, price_resident_ce
 from .covering import (CoveringExpression, build_covering_expression,
                        build_covering_expressions)
 from .fingerprint import (Fingerprint, all_fingerprints, fingerprint,
@@ -12,6 +12,7 @@ from .fingerprint import (Fingerprint, all_fingerprints, fingerprint,
 from .identify import (Occurrence, SimilarSubexpression,
                        identify_similar_subexpressions)
 from .mckp import MCKPSolution, solve_bruteforce, solve_mckp
+from .memory import MemoryEntry, MemoryManager, MemoryPool, PoolStats
 from .optimizer import MQOReport, MultiQueryOptimizer, OptimizedBatch
 from .plan import PlanNode, contains_unfriendly, tree_depth, tree_size, walk
 from .rewrite import RewrittenBatch, Rewriter, rewrite_batch
@@ -19,11 +20,13 @@ from .rewrite import RewrittenBatch, Rewriter, rewrite_batch
 __all__ = [
     "CacheEntry", "CacheManager", "CacheStats", "KnapsackItem",
     "generate_knapsack_items", "CostModel", "price_ce", "price_ces",
+    "price_resident_ce",
     "CoveringExpression", "build_covering_expression",
     "build_covering_expressions", "Fingerprint", "all_fingerprints",
     "fingerprint", "fingerprint_set", "node_id", "Occurrence",
     "SimilarSubexpression", "identify_similar_subexpressions",
-    "MCKPSolution", "solve_bruteforce", "solve_mckp", "MQOReport",
+    "MCKPSolution", "solve_bruteforce", "solve_mckp",
+    "MemoryEntry", "MemoryManager", "MemoryPool", "PoolStats", "MQOReport",
     "MultiQueryOptimizer", "OptimizedBatch", "PlanNode",
     "contains_unfriendly", "tree_depth", "tree_size", "walk",
     "RewrittenBatch", "Rewriter", "rewrite_batch",

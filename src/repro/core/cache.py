@@ -1,45 +1,32 @@
-"""Budgeted in-memory cache manager for materialized covering relations.
+"""Budgeted cache of materialized covering relations — a thin pool view
+over :class:`repro.core.memory.MemoryManager`.
 
 The MCKP decides *admission* offline (the paper's core departure from
-eviction-based caching literature); this manager enforces the budget at
+eviction-based caching literature); this view enforces the budget at
 materialization time.  Cardinality-estimation error can make the true
 materialized size exceed the estimate — mirroring the paper (§6.3,
-footnote 6-ii) the overflow is *spilled*: the payload is moved to host
-memory (the Spark `MEMORY_AND_DISK` analog on a TPU is HBM → host DRAM
-offload) and reads become more expensive.
+footnote 6-ii) the overflow takes the manager's spill path: device →
+host (the Spark ``MEMORY_AND_DISK`` analog on a TPU is HBM → host DRAM
+offload) → drop.
+
+By default the view owns a private single-pool manager with the
+``"admission"`` policy (residents are never evicted — pure paper
+semantics).  Passing ``manager=`` instead registers the pool on a
+shared :class:`MemoryManager`, where the session-level eviction policy
+(``lru`` / ``benefit``) and the shared budget apply — the unified
+memory hierarchy used by ``relational.Session`` and
+``serving.ServingEngine``.
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Optional
 
+from .memory import MemoryEntry, MemoryManager, MemoryPool, PoolStats
 
-@dataclass
-class CacheEntry:
-    psi: bytes
-    payload: Any                  # device arrays (Table / KV blocks / …)
-    nbytes: int
-    est_bytes: int
-    spilled: bool = False
-    hits: int = 0
-    created_at: float = field(default_factory=time.monotonic)
-
-
-@dataclass
-class CacheStats:
-    budget: int = 0
-    used: int = 0
-    spilled_bytes: int = 0
-    admissions: int = 0
-    hits: int = 0
-    misses: int = 0
-
-    def as_dict(self) -> dict:
-        return dict(budget=self.budget, used=self.used,
-                    spilled_bytes=self.spilled_bytes,
-                    admissions=self.admissions, hits=self.hits,
-                    misses=self.misses)
+# Backward-compatible aliases (PR 2): entries and stats now live in the
+# unified memory subsystem.
+CacheEntry = MemoryEntry
+CacheStats = PoolStats
 
 
 class CacheManager:
@@ -47,72 +34,62 @@ class CacheManager:
 
     def __init__(self, budget_bytes: int,
                  spill_fn: Optional[Callable[[Any], Any]] = None,
-                 unspill_fn: Optional[Callable[[Any], Any]] = None):
-        self.budget = int(budget_bytes)
-        self._entries: Dict[bytes, CacheEntry] = {}
-        self._spill_fn = spill_fn
-        self._unspill_fn = unspill_fn
-        self.stats = CacheStats(budget=self.budget)
+                 unspill_fn: Optional[Callable[[Any], Any]] = None,
+                 *,
+                 manager: Optional[MemoryManager] = None,
+                 pool: str = "ce",
+                 policy: Optional[str] = None):
+        if manager is None:
+            manager = MemoryManager(int(budget_bytes),
+                                    policy=policy or "admission")
+        else:
+            assert int(budget_bytes) == manager.device_budget, (
+                "a pool view cannot enforce a budget different from its "
+                "shared manager's device budget")
+        self.manager = manager
+        self.budget = manager.device_budget
+        self._pool: MemoryPool = manager.pool(
+            pool, spill_fn=spill_fn, unspill_fn=unspill_fn, policy=policy)
 
     # -- admission ---------------------------------------------------------
     def put(self, psi: bytes, payload: Any, nbytes: int,
-            est_bytes: int = 0) -> CacheEntry:
-        entry = CacheEntry(psi=psi, payload=payload, nbytes=int(nbytes),
-                           est_bytes=int(est_bytes))
-        overflow = (self.stats.used + entry.nbytes) - self.budget
-        if overflow > 0 and self._spill_fn is not None:
-            entry.payload = self._spill_fn(entry.payload)
-            entry.spilled = True
-            self.stats.spilled_bytes += entry.nbytes
-        else:
-            self.stats.used += entry.nbytes
-        self._entries[psi] = entry
-        self.stats.admissions += 1
-        return entry
+            est_bytes: int = 0, benefit: float = 0.0) -> MemoryEntry:
+        return self._pool.put(psi, payload, nbytes=nbytes,
+                              est_bytes=est_bytes, benefit=benefit)
 
     # -- lookup ------------------------------------------------------------
     def get(self, psi: bytes) -> Optional[Any]:
-        entry = self._entries.get(psi)
-        if entry is None:
-            self.stats.misses += 1
-            return None
-        entry.hits += 1
-        self.stats.hits += 1
-        if entry.spilled and self._unspill_fn is not None:
-            return self._unspill_fn(entry.payload)
-        return entry.payload
+        return self._pool.get(psi)
 
     def contains(self, psi: bytes) -> bool:
-        return psi in self._entries
+        return self._pool.contains(psi)
 
-    def entry(self, psi: bytes) -> Optional[CacheEntry]:
-        return self._entries.get(psi)
+    def touch(self, psi: bytes) -> bool:
+        return self._pool.touch(psi)
+
+    def entry(self, psi: bytes) -> Optional[MemoryEntry]:
+        return self._pool.entry(psi)
+
+    def resident_psis(self) -> frozenset:
+        """ψ of every entry still materialized (device or host tier) —
+        the cross-batch reuse set the optimizer re-prices as
+        already-paid."""
+        return frozenset(self._pool.keys())
 
     # -- maintenance ---------------------------------------------------------
     def evict(self, psi: bytes) -> None:
-        entry = self._entries.pop(psi, None)
-        if entry is None:
-            return
-        if entry.spilled:
-            self.stats.spilled_bytes -= entry.nbytes
-        else:
-            self.stats.used -= entry.nbytes
+        self._pool.evict(psi)
 
     def clear(self) -> None:
-        self._entries.clear()
-        self.stats.used = 0
-        self.stats.spilled_bytes = 0
+        self._pool.clear()
+
+    @property
+    def stats(self) -> PoolStats:
+        return self._pool.stats
 
     @property
     def used_bytes(self) -> int:
-        return self.stats.used
+        return self._pool.used_bytes
 
     def report(self) -> dict:
-        return {
-            **self.stats.as_dict(),
-            "entries": [
-                dict(psi=e.psi.hex()[:12], nbytes=e.nbytes,
-                     est_bytes=e.est_bytes, spilled=e.spilled, hits=e.hits)
-                for e in self._entries.values()
-            ],
-        }
+        return self._pool.report()

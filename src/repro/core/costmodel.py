@@ -82,3 +82,18 @@ def price_ces(ces: Sequence[CoveringExpression], model: CostModel):
     for ce in ces:
         price_ce(ce, model)
     return list(ces)
+
+
+def price_resident_ce(ce: CoveringExpression) -> CoveringExpression:
+    """Eq. 2 for an already-materialized CE (cross-batch retention):
+    C_E(τ*) and C_W are sunk costs paid by the batch that admitted it,
+    so the remaining price is m reads plus per-consumer extraction, and
+    the knapsack weight is zero — the bytes already sit inside the
+    memory manager's accounting.  Must run after :func:`price_ce` (it
+    consumes the cost_detail breakdown)."""
+    d = ce.cost_detail
+    remaining = ce.m * d.get("C_R", 0.0) + d.get("C_X", 0.0)
+    ce.value = d.get("C_omega", ce.value) - remaining
+    ce.weight = 0
+    ce.cost_detail = {**d, "resident": True, "C_Omega": remaining}
+    return ce

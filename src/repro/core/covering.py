@@ -14,7 +14,7 @@ extraction plan (per-member filter/project re-applied).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Sequence
+from typing import List, Optional, Sequence
 
 from .fingerprint import Fingerprint, fingerprint, fingerprint_set
 from .identify import SimilarSubexpression
@@ -33,6 +33,16 @@ class CoveringExpression:
     weight: int = 0                     # w(Ω) = |Ω| in bytes
     est_rows: int = 0                   # estimated output cardinality
     cost_detail: dict = field(default_factory=dict)
+    # memoized strict content fingerprint of the covering tree (filled
+    # lazily by strict_psi(); cross-batch retention identity)
+    _strict_psi: Optional[Fingerprint] = None
+
+    def strict_psi(self) -> Fingerprint:
+        if self._strict_psi is None:
+            from .fingerprint import strict_fingerprint
+
+            self._strict_psi = strict_fingerprint(self.tree)
+        return self._strict_psi
 
     @property
     def m(self) -> int:

@@ -61,10 +61,10 @@ def _h(data: bytes) -> Fingerprint:
     return hashlib.sha256(data).digest()[:_DIGEST_BYTES]
 
 
-def fingerprint(node: PlanNode, memo: Dict[int, Fingerprint] | None = None) -> Fingerprint:
-    """F(τ) per Definition 2 (iterative post-order to avoid recursion limits)."""
-    if memo is None:
-        memo = {}
+def _merkle(node: PlanNode, memo: Dict[int, Fingerprint],
+            id_fn, salt: bytes) -> Fingerprint:
+    """Shared iterative post-order Merkle walk (no recursion limits);
+    ``id_fn`` picks the operator-identifier flavor (loose vs content)."""
     stack = [(node, False)]
     while stack:
         cur, expanded = stack.pop()
@@ -79,8 +79,43 @@ def fingerprint(node: PlanNode, memo: Dict[int, Fingerprint] | None = None) -> F
             child_fps = [memo[id(c)] for c in cur.children]
             if cur.commutative and len(child_fps) > 1:
                 child_fps = sorted(child_fps)
-            memo[id(cur)] = _h(node_id(cur) + b"|" + b"|".join(child_fps))
+            memo[id(cur)] = _h(salt + id_fn(cur) + b"|"
+                               + b"|".join(child_fps))
     return memo[id(node)]
+
+
+def fingerprint(node: PlanNode, memo: Dict[int, Fingerprint] | None = None) -> Fingerprint:
+    """F(τ) per Definition 2."""
+    if memo is None:
+        memo = {}
+    return _merkle(node, memo, node_id, b"")
+
+
+def _content_id(node: PlanNode) -> bytes:
+    """Operator identifier INCLUDING loose attributes.
+
+    ψ is deliberately loose (Def. 1) so similar subexpressions share
+    it — but that means ψ identifies a covering *structure*, not the
+    covering *content*: two batches can produce the same ψ with
+    different merged predicates / column sets.  Cross-batch reuse of a
+    materialized CE therefore needs this stricter identity.  Loose
+    nodes contribute ``content_attrs`` (e.g. a Filter's canonical
+    predicate) when they define it; everything else falls back to
+    ``strict_attrs``.
+    """
+    attrs = getattr(node, "content_attrs", None)
+    if attrs is None:
+        attrs = node.strict_attrs
+    return _canon(node.label) + _canon(attrs)
+
+
+def strict_fingerprint(node: PlanNode) -> Fingerprint:
+    """Merkle fingerprint over full operator content (see _content_id).
+
+    Same ψ + same strict fingerprint ⇒ the materialized bytes of one
+    tree are a valid covering relation for the other.
+    """
+    return _merkle(node, {}, _content_id, b"strict|")
 
 
 def all_fingerprints(node: PlanNode) -> Dict[int, Fingerprint]:

@@ -8,6 +8,15 @@ configurable resolution — weights are rounded UP, hence the real budget
 is never exceeded (the solution can only be conservatively sub-optimal
 by the rounding slack).
 
+Zero-weight items — cross-batch residents the optimizer re-prices as
+"already paid" (their bytes are materialized from a previous batch) —
+are lifted out of the DP: within a group the best zero-weight option is
+a free baseline, so it is credited up front and every heavier option in
+the group competes with its value *relative to* that baseline.  This is
+an exact transformation (choosing nothing from the transformed group
+means choosing the baseline) and keeps the capacity axis reserved for
+bytes that still need materializing.
+
 ``solve_bruteforce`` enumerates all choices and is used by property
 tests to validate the DP.
 """
@@ -48,6 +57,27 @@ def solve_mckp(
     groups: Dict[int, List[KnapsackItem]] = defaultdict(list)
     for it in feasible:
         groups[it.group].append(it)
+
+    # Lift out zero-weight (already-paid) baselines per group.
+    base_value = 0.0
+    base_choice: Dict[int, KnapsackItem] = {}
+    base_of: Dict[int, float] = {}
+    for gid in list(groups):
+        zero = [it for it in groups[gid] if it.weight == 0]
+        if not zero:
+            continue
+        best = max(zero, key=lambda it: it.value)
+        base_value += best.value
+        base_choice[gid] = best
+        base_of[gid] = best.value
+        # only heavier options that beat the free baseline stay in play
+        groups[gid] = [it for it in groups[gid]
+                       if it.weight > 0 and it.value > best.value]
+        if not groups[gid]:
+            del groups[gid]
+    if not groups:
+        picked0 = list(base_choice.values())
+        return MCKPSolution(picked0, base_value, 0, capacity, 0)
     group_ids = sorted(groups)
 
     resolution = max(1, math.ceil(capacity / max_buckets))
@@ -70,7 +100,7 @@ def solve_mckp(
             w = scaled[id(it)]
             if w > n_buckets:
                 continue
-            v = it.value
+            v = it.value - base_of.get(gi, 0.0)
             for c in range(n_buckets, w - 1, -1):
                 cand = dp[c - w] + v
                 if cand > new_dp[c]:
@@ -82,13 +112,18 @@ def solve_mckp(
     # Backtrack from the best capacity.
     best_c = max(range(n_buckets + 1), key=lambda c: dp[c])
     picked: List[KnapsackItem] = []
+    chosen_groups = set()
     c = best_c
     for gi_idx in range(len(group_ids) - 1, -1, -1):
         it = choice[gi_idx][c]
         if it is not None:
             picked.append(it)
+            chosen_groups.add(group_ids[gi_idx])
             c -= scaled[id(it)]
     picked.reverse()
+    # groups whose DP choice did not beat their free baseline keep it
+    picked.extend(it for gid, it in sorted(base_choice.items())
+                  if gid not in chosen_groups)
 
     total_w = sum(it.weight for it in picked)
     total_v = sum(it.value for it in picked)

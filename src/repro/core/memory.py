@@ -1,0 +1,385 @@
+"""Unified memory hierarchy: one budget-aware :class:`MemoryManager`.
+
+The paper's MCKP formulation assumes a SINGLE memory budget governs
+what gets materialized.  This module is that budget's runtime owner:
+every byte of device-resident cached state — CE materializations
+(``core.cache``), device scan columns (``relational.physical``),
+serving prefix states (``serving.engine``) — is admitted through one
+manager, partitioned into named *pools*.
+
+Hierarchy (two spill tiers instead of the old binary spill):
+
+    device (budgeted)  ──evict──▶  host (optionally budgeted)  ──▶  drop
+
+* A put that does not fit evicts victims chosen by the pool's
+  **eviction policy**:
+
+    - ``"lru"``      least-recently-used first (logical clock);
+    - ``"benefit"``  lowest benefit-per-byte first, where *benefit* is
+      the caller-supplied savings estimate (the CostModel's Eq. 3 value
+      for CEs, the transfer cost for scan columns) — the
+      benefit-aware eviction of Yang et al. 2018;
+    - ``"admission"`` no eviction of residents: the INCOMING entry
+      spills (the paper's semantics — the MCKP already decided
+      admission offline, residents are load-bearing).
+
+* An evicted entry spills to the host tier when its pool has a
+  ``spill_fn`` (HBM → host DRAM offload); pools without one (e.g. the
+  scan cache, whose source host arrays still live in the catalog) drop
+  the payload instead — a later get is a miss and the caller
+  recomputes.
+
+* A host-tier hit is unspilled and **promoted back to device when
+  there is headroom** (fixing the old CacheManager's re-unspill-per-hit
+  churn); without headroom the unspilled payload is returned but the
+  entry stays on the host tier.
+
+Invariants (property-tested in ``tests/test_memory.py``):
+
+    device_used ≤ device_budget        after ANY op sequence
+    host_used   ≤ host_budget          (when a host budget is set)
+    *_used      == Σ nbytes of entries actually resident on that tier
+
+Dropping or spilling never changes results — every consumer treats a
+miss as "recompute from the retained plan" — so batches are
+bit-identical under a pathologically tiny budget and an unlimited one.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterable, List, Optional
+
+POLICIES = ("lru", "benefit", "admission")
+
+DEVICE, HOST, DROPPED = "device", "host", "dropped"
+
+
+@dataclass
+class MemoryEntry:
+    key: Any
+    pool: str
+    payload: Any
+    nbytes: int
+    est_bytes: int = 0
+    benefit: float = 0.0          # savings estimate (policy="benefit")
+    tier: str = DEVICE            # "device" | "host" | "dropped"
+    hits: int = 0
+    seq: int = 0                  # logical clock (policy="lru")
+    created_at: float = field(default_factory=time.monotonic)
+
+    @property
+    def spilled(self) -> bool:    # CacheEntry-compat view
+        return self.tier == HOST
+
+    @property
+    def psi(self):                # CacheEntry-compat view
+        return self.key
+
+
+@dataclass
+class PoolStats:
+    """Per-pool accounting (field names match the old CacheStats)."""
+
+    budget: int = 0               # the manager's device budget
+    used: int = 0                 # this pool's device-tier bytes
+    spilled_bytes: int = 0        # this pool's host-tier bytes
+    admissions: int = 0
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    drops: int = 0
+    promotions: int = 0
+
+    def as_dict(self) -> dict:
+        return dict(budget=self.budget, used=self.used,
+                    spilled_bytes=self.spilled_bytes,
+                    admissions=self.admissions, hits=self.hits,
+                    misses=self.misses, evictions=self.evictions,
+                    drops=self.drops, promotions=self.promotions)
+
+
+class MemoryPool:
+    """A named view over the manager: one keyspace, one spill path."""
+
+    def __init__(self, manager: "MemoryManager", name: str,
+                 spill_fn: Optional[Callable[[Any], Any]] = None,
+                 unspill_fn: Optional[Callable[[Any], Any]] = None,
+                 policy: Optional[str] = None):
+        self.manager = manager
+        self.name = name
+        self.spill_fn = spill_fn
+        self.unspill_fn = unspill_fn
+        self.policy = policy or manager.policy
+        assert self.policy in POLICIES, self.policy
+        self.entries: Dict[Any, MemoryEntry] = {}
+        self.stats = PoolStats(budget=manager.device_budget)
+
+    # -- delegated operations ------------------------------------------------
+    def put(self, key, payload, nbytes: int, est_bytes: int = 0,
+            benefit: float = 0.0) -> MemoryEntry:
+        return self.manager.put(self, key, payload, nbytes,
+                                est_bytes=est_bytes, benefit=benefit)
+
+    def get(self, key, default=None):
+        return self.manager.get(self, key, default)
+
+    def touch(self, key) -> bool:
+        """Presence check that refreshes LRU recency (counted as a hit)
+        without unspilling or promoting — for callers that only need to
+        know the entry exists and will read the payload later."""
+        entry = self.entries.get(key)
+        if entry is None:
+            return False
+        self.manager._seq += 1
+        entry.seq = self.manager._seq
+        entry.hits += 1
+        self.stats.hits += 1
+        return True
+
+    def contains(self, key) -> bool:
+        return key in self.entries
+
+    def __contains__(self, key) -> bool:
+        return key in self.entries
+
+    def entry(self, key) -> Optional[MemoryEntry]:
+        return self.entries.get(key)
+
+    def evict(self, key) -> None:
+        self.manager.evict(self, key)
+
+    def invalidate(self, pred: Callable[[Any], bool]) -> int:
+        """Drop every entry whose key matches ``pred``; returns count."""
+        victims = [k for k in self.entries if pred(k)]
+        for k in victims:
+            self.manager.evict(self, k)
+        return len(victims)
+
+    def clear(self) -> None:
+        for k in list(self.entries):
+            self.manager.evict(self, k)
+        # counters other than occupancy survive a clear (they are
+        # lifetime telemetry); occupancy is zeroed by the evictions
+
+    def keys(self) -> Iterable:
+        return self.entries.keys()
+
+    @property
+    def used_bytes(self) -> int:
+        return self.stats.used
+
+    def report(self) -> dict:
+        return {
+            **self.stats.as_dict(),
+            "entries": [
+                dict(psi=_short_key(e.key), nbytes=e.nbytes,
+                     est_bytes=e.est_bytes, spilled=e.spilled,
+                     hits=e.hits)
+                for e in self.entries.values()
+            ],
+        }
+
+
+class MemoryManager:
+    """Owns the device-byte budget shared by every registered pool."""
+
+    def __init__(self, device_budget: int,
+                 host_budget: Optional[int] = None,
+                 policy: str = "lru"):
+        assert policy in POLICIES, policy
+        self.device_budget = int(device_budget)
+        self.host_budget = None if host_budget is None else int(host_budget)
+        self.policy = policy
+        self.pools: Dict[str, MemoryPool] = {}
+        self.device_used = 0
+        self.host_used = 0
+        self._seq = 0
+
+    # -- pool registry -------------------------------------------------------
+    def pool(self, name: str, *,
+             spill_fn: Optional[Callable[[Any], Any]] = None,
+             unspill_fn: Optional[Callable[[Any], Any]] = None,
+             policy: Optional[str] = None) -> MemoryPool:
+        """Get-or-create the named pool (idempotent; first caller wins
+        the configuration)."""
+        p = self.pools.get(name)
+        if p is None:
+            p = self.pools[name] = MemoryPool(
+                self, name, spill_fn=spill_fn, unspill_fn=unspill_fn,
+                policy=policy)
+        return p
+
+    # -- admission -----------------------------------------------------------
+    def put(self, pool: MemoryPool, key, payload, nbytes: int,
+            est_bytes: int = 0, benefit: float = 0.0) -> MemoryEntry:
+        nbytes = int(nbytes)
+        if key in pool.entries:          # re-put invalidates the old entry
+            self.evict(pool, key)
+        self._seq += 1
+        entry = MemoryEntry(key=key, pool=pool.name, payload=payload,
+                            nbytes=nbytes, est_bytes=int(est_bytes),
+                            benefit=float(benefit), seq=self._seq)
+        pool.stats.admissions += 1
+
+        if self.device_used + nbytes > self.device_budget:
+            # admission pools protect their own residents (victim
+            # selection skips them) but may still displace entries of
+            # evictable pools; when nothing can be freed the INCOMING
+            # entry takes the spill path
+            self._make_room(nbytes)
+
+        if self.device_used + nbytes <= self.device_budget:
+            self.device_used += nbytes
+            pool.stats.used += nbytes
+            pool.entries[key] = entry
+        else:
+            # could not free enough (entry bigger than the whole budget,
+            # or every resident is admission-pinned)
+            self._demote(pool, entry)
+            if entry.tier != DROPPED:
+                pool.entries[key] = entry
+        return entry
+
+    # -- lookup --------------------------------------------------------------
+    def get(self, pool: MemoryPool, key, default=None):
+        entry = pool.entries.get(key)
+        if entry is None:
+            pool.stats.misses += 1
+            return default
+        self._seq += 1
+        entry.seq = self._seq
+        entry.hits += 1
+        pool.stats.hits += 1
+        if entry.tier == DEVICE:
+            return entry.payload
+        # host tier: unspill, promoting back to device when there is
+        # headroom (the old manager re-unspilled on EVERY hit and never
+        # promoted — the satellite-1 churn fix).  Without an unspill_fn
+        # the payload stays in host form, so it must not be relabeled
+        # (and re-accounted) as device-resident.
+        if pool.unspill_fn is None:
+            return entry.payload
+        payload = pool.unspill_fn(entry.payload)
+        if self.device_used + entry.nbytes <= self.device_budget:
+            entry.payload = payload
+            entry.tier = DEVICE
+            self.host_used -= entry.nbytes
+            self.device_used += entry.nbytes
+            pool.stats.spilled_bytes -= entry.nbytes
+            pool.stats.used += entry.nbytes
+            pool.stats.promotions += 1
+        return payload
+
+    # -- maintenance ---------------------------------------------------------
+    def evict(self, pool: MemoryPool, key) -> None:
+        entry = pool.entries.pop(key, None)
+        if entry is None:
+            return
+        self._release(pool, entry)
+        entry.tier = DROPPED
+
+    def clear(self) -> None:
+        for p in self.pools.values():
+            p.clear()
+
+    @property
+    def device_headroom(self) -> int:
+        return max(0, self.device_budget - self.device_used)
+
+    def report(self) -> dict:
+        return {
+            "device_budget": self.device_budget,
+            "device_used": self.device_used,
+            "host_budget": self.host_budget,
+            "host_used": self.host_used,
+            "policy": self.policy,
+            "pools": {n: p.report() for n, p in self.pools.items()},
+        }
+
+    # -- internals -----------------------------------------------------------
+    def _release(self, pool: MemoryPool, entry: MemoryEntry) -> None:
+        if entry.tier == DEVICE:
+            self.device_used -= entry.nbytes
+            pool.stats.used -= entry.nbytes
+        elif entry.tier == HOST:
+            self.host_used -= entry.nbytes
+            pool.stats.spilled_bytes -= entry.nbytes
+
+    def _victim_score(self, e: MemoryEntry):
+        """Ascending victim order: (policy primary, recency).  Benefit
+        pools rank by benefit-per-byte; lru pools rank purely by
+        recency (primary 0.0 — recomputable state goes first when mixed
+        with benefit-ranked pools)."""
+        if self.pools[e.pool].policy == "benefit":
+            return (e.benefit / max(e.nbytes, 1), e.seq)
+        return (0.0, e.seq)
+
+    def _make_room(self, nbytes: int) -> None:
+        """Evict device victims (policy order, across evictable pools)
+        until ``nbytes`` fits or nothing evictable remains.  The
+        incoming entry is not yet in any pool, so it can never be its
+        own victim."""
+        if nbytes > self.device_budget:
+            # can never fit: don't flush residents for nothing — the
+            # caller sends the oversized entry down the spill path
+            return
+        candidates = [
+            e for p in self.pools.values() if p.policy != "admission"
+            for e in p.entries.values()
+            if e.tier == DEVICE
+        ]
+        candidates.sort(key=self._victim_score)
+        for victim in candidates:
+            if self.device_used + nbytes <= self.device_budget:
+                break
+            vpool = self.pools[victim.pool]
+            self.device_used -= victim.nbytes
+            vpool.stats.used -= victim.nbytes
+            vpool.stats.evictions += 1
+            victim.tier = "evicting"   # transient: not on any tier
+            self._demote(vpool, victim)
+            if victim.tier == DROPPED:
+                del vpool.entries[victim.key]
+
+    def _make_host_room(self, nbytes: int) -> None:
+        if self.host_budget is None or nbytes > self.host_budget:
+            # unbounded tier, or an entry that can never fit (the
+            # caller drops it): never flush the host tier for nothing
+            return
+        candidates = [
+            e for p in self.pools.values()
+            for e in p.entries.values() if e.tier == HOST
+        ]
+        candidates.sort(key=self._victim_score)
+        for victim in candidates:
+            if self.host_used + nbytes <= self.host_budget:
+                break
+            vpool = self.pools[victim.pool]
+            self.host_used -= victim.nbytes
+            vpool.stats.spilled_bytes -= victim.nbytes
+            vpool.stats.drops += 1
+            victim.tier = DROPPED
+            del vpool.entries[victim.key]
+
+    def _demote(self, pool: MemoryPool, entry: MemoryEntry) -> None:
+        """Tier 2/3 of the spill path: host when the pool can spill and
+        the host budget allows, else drop."""
+        if pool.spill_fn is not None:
+            self._make_host_room(entry.nbytes)
+            if (self.host_budget is None
+                    or self.host_used + entry.nbytes <= self.host_budget):
+                entry.payload = pool.spill_fn(entry.payload)
+                entry.tier = HOST
+                self.host_used += entry.nbytes
+                pool.stats.spilled_bytes += entry.nbytes
+                return
+        entry.payload = None
+        entry.tier = DROPPED
+        pool.stats.drops += 1
+
+
+def _short_key(key) -> str:
+    if isinstance(key, bytes):
+        return key.hex()[:12]
+    return str(key)[:48]

@@ -12,10 +12,10 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, List, Mapping, Optional, Sequence
 
 from .candidates import generate_knapsack_items
-from .costmodel import CostModel, price_ces
+from .costmodel import CostModel, price_ces, price_resident_ce
 from .covering import CoveringExpression, build_covering_expressions
 from .identify import identify_similar_subexpressions
 from .mckp import MCKPSolution, solve_mckp
@@ -30,6 +30,7 @@ class MQOReport:
     n_ces: int = 0
     n_valid_ces: int = 0
     n_items: int = 0
+    n_resident: int = 0
     n_selected: int = 0
     selected_value: float = 0.0
     selected_weight: int = 0
@@ -67,7 +68,20 @@ class MultiQueryOptimizer:
         self.max_compound_size = max_compound_size
         self.chain_cache_plans = chain_cache_plans
 
-    def optimize(self, plans: Sequence[PlanNode]) -> OptimizedBatch:
+    def optimize(self, plans: Sequence[PlanNode], *,
+                 resident: Optional[Mapping[bytes, bytes]] = None
+                 ) -> OptimizedBatch:
+        """Run the four phases.  ``resident`` maps the ψ of every CE
+        still materialized from a previous batch (the unified
+        MemoryManager's CE pool) to the strict fingerprint of the tree
+        that was materialized.  A new CE whose ψ AND strict content
+        both match is re-priced as a zero-weight, already-paid knapsack
+        item — its C_E and C_W were spent by batch *k*, so batch *k+1*
+        pays only the reads and per-consumer extraction.  (ψ alone is
+        loose: same structure, possibly different merged predicates —
+        the strict check is what makes reuse sound.)  This turns
+        per-batch MQO into cross-batch work sharing on recurring
+        workloads."""
         t0 = time.perf_counter()
         report = MQOReport(n_queries=len(plans), budget=self.budget)
 
@@ -86,6 +100,15 @@ class MultiQueryOptimizer:
 
         # Phase 2b: pricing (Eq. 1–3) + Algorithm 2 candidate groups.
         price_ces(ces, self.cost_model)
+        if resident:
+            for ce in ces:
+                # cheap psi membership first — the strict content hash
+                # (a full Merkle walk, memoized on the CE) only runs
+                # for actual candidates
+                if (ce.psi in resident
+                        and resident[ce.psi] == ce.strict_psi()):
+                    price_resident_ce(ce)
+                    report.n_resident += 1
         items = generate_knapsack_items(
             ces, max_compound_size=self.max_compound_size)
         report.n_items = len(items)

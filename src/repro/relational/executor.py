@@ -1,6 +1,12 @@
 """The "SparkSQL Server" (paper §5): a centralized session that
 accumulates client queries, runs the multi-query optimizer over the
 batch, and executes cache plans + rewritten queries on the cluster.
+
+Memory (PR 2, see ROADMAP "Memory hierarchy"): the session owns ONE
+budget-aware :class:`~repro.core.memory.MemoryManager`; the CE cache
+and the device scan cache are pools of it, CEs are retained across
+batches (``retain_across_batches``), and the next batch's MCKP
+re-prices still-resident CEs as zero-weight already-paid items.
 """
 from __future__ import annotations
 
@@ -12,6 +18,7 @@ import jax
 import numpy as np
 
 from ..core.cache import CacheManager
+from ..core.memory import MemoryManager
 from ..core.optimizer import MultiQueryOptimizer, OptimizedBatch
 from . import logical as L
 from .physical import ExecContext, ExecMetrics, TableStorage, execute
@@ -64,7 +71,10 @@ class Session:
                  disk_latency_per_byte: float = 0.0,
                  fuse: bool = True,
                  defer_sync: bool = True,
-                 use_scan_cache: bool = True):
+                 use_scan_cache: bool = True,
+                 policy: str = "lru",
+                 host_budget_bytes: Optional[int] = None,
+                 retain_across_batches: bool = True):
         self.catalog: Dict[str, TableStorage] = {}
         self.stats = StatsRegistry()
         self.budget = int(budget_bytes)
@@ -76,17 +86,40 @@ class Session:
         self.fuse = fuse
         self.defer_sync = defer_sync
         self.use_scan_cache = use_scan_cache
-        # (table, column, capacity, sharding) -> padded device array,
-        # shared by every batch this session runs
-        self._scan_cache: Dict[tuple, object] = {}
+        # One budget-aware memory hierarchy for everything the session
+        # materializes on device (see core.memory): the CE cache spills
+        # device -> host -> drop; evicted scan columns just drop (their
+        # source host arrays still live in the catalog).  The host tier
+        # is bounded too (default 4x the device budget) so a long-lived
+        # session with retention cannot grow host RAM without limit.
+        self.retain_across_batches = retain_across_batches
+        if host_budget_bytes is None:
+            host_budget_bytes = 4 * self.budget
+        self.memory = MemoryManager(self.budget,
+                                    host_budget=host_budget_bytes,
+                                    policy=policy)
+        self._scan_pool = self.memory.pool("scan")
+        self._ce_cache = CacheManager(
+            self.budget, spill_fn=_spill_to_host, unspill_fn=_unspill,
+            manager=self.memory, pool="ce")
+        # psi -> strict content fingerprint of the covering tree that
+        # was materialized, retained so stale residents (same loose psi,
+        # different covering content) are detected across batches.
+        # Cache PLANS need no retention: rewrite_batch regenerates a
+        # fresh, intra-batch-consistent plan for every selected CE.
+        self._resident_strict: Dict[bytes, bytes] = {}
 
     # -- catalog management -------------------------------------------------
     def register(self, storage: TableStorage,
                  columnar_for_stats: Optional[Dict[str, np.ndarray]] = None):
         # re-registering a name must not serve the old table's device
-        # buffers from the scan cache (keys lead with the table name)
-        for k in [k for k in self._scan_cache if k[0] == storage.name]:
-            del self._scan_cache[k]
+        # buffers from the scan cache (keys lead with the table name) ...
+        self._scan_pool.invalidate(lambda k: k[0] == storage.name)
+        # ... and any retained CE content derived from the old data is
+        # stale too (CE plans can join across tables — drop them all)
+        if storage.name in self.catalog:
+            self._ce_cache.clear()
+            self._resident_strict.clear()
         self.catalog[storage.name] = storage
         cols = storage.columnar if storage.columnar is not None \
             else columnar_for_stats
@@ -108,11 +141,11 @@ class Session:
             fuse=self.fuse,
             defer_sync=self.defer_sync,
             cost_model=self.cost_model,
-            scan_cache=self._scan_cache if self.use_scan_cache else None)
+            scan_cache=self._scan_pool if self.use_scan_cache else None)
 
     def clear_scan_cache(self) -> None:
         """Drop memoized device scan buffers (e.g. after data changes)."""
-        self._scan_cache.clear()
+        self._scan_pool.clear()
 
     def run_one(self, plan: L.Node,
                 ctx: Optional[ExecContext] = None) -> QueryResult:
@@ -131,7 +164,14 @@ class Session:
         budget_bytes: Optional[int] = None,
         locally_optimize: bool = True,
     ) -> BatchResult:
-        """Execute a batch of queries, with or without worksharing."""
+        """Execute a batch of queries, with or without worksharing.
+
+        ``budget_bytes`` overrides the *planning* budget (MCKP
+        capacity) for this batch only; actual admission is always
+        enforced by the session-lifetime MemoryManager at the session
+        budget.  A zero planning budget also disables cross-batch
+        resident reuse — it is the "no caching at all" baseline.
+        """
         if locally_optimize:
             plans = [optimize_single(p) for p in plans]
 
@@ -150,12 +190,32 @@ class Session:
             k=k,
             ce_transform=make_ce_transform(),
         )
-        optimized = optimizer.optimize(list(plans))
+        if not self.retain_across_batches:
+            self._ce_cache.clear()
+            self._resident_strict.clear()
+        else:
+            # prune metadata for entries the hierarchy has dropped —
+            # this dict must not grow with the workload's history
+            for psi in [psi for psi in self._resident_strict
+                        if not self._ce_cache.contains(psi)]:
+                del self._resident_strict[psi]
+        resident = {} if budget <= 0 else dict(self._resident_strict)
+        optimized = optimizer.optimize(list(plans), resident=resident)
 
-        cache = CacheManager(budget, spill_fn=_spill_to_host,
-                             unspill_fn=_unspill)
+        cache = self._ce_cache
+        # a selected CE whose loose psi collides with a retained entry
+        # of DIFFERENT covering content must not read the stale bytes
+        for ce in optimized.rewritten.ces:
+            sfp = ce.strict_psi()        # memoized on the CE
+            if self._resident_strict.get(ce.psi, sfp) != sfp:
+                cache.evict(ce.psi)
+            self._resident_strict[ce.psi] = sfp
         ctx = self._fresh_ctx(cache)
         ctx.cache_plans = dict(optimized.rewritten.cache_plans)
+        # benefit-per-byte eviction ranks entries by the cost model's
+        # savings estimate (Eq. 3 value at admission time)
+        ctx.cache_values = {ce.psi: max(float(ce.value), 0.0)
+                            for ce in optimized.rewritten.ces}
 
         t0 = time.perf_counter()
         results = [self.run_one(p, ctx) for p in optimized.rewritten.plans]

@@ -47,6 +47,13 @@ class Node:
         return None
 
     @property
+    def content_attrs(self) -> object:
+        """Full attribute content for cross-batch strict fingerprints
+        (loose nodes override; strict nodes are covered by
+        ``strict_attrs``)."""
+        return self.strict_attrs
+
+    @property
     def schema(self) -> Schema:
         raise NotImplementedError
 
@@ -115,6 +122,10 @@ class CachedScan(Node):
     loose = True
 
     @property
+    def content_attrs(self) -> object:
+        return self.psi
+
+    @property
     def label(self) -> str:
         return f"cached:{self.psi.hex()[:12]}"
 
@@ -152,6 +163,10 @@ class Filter(Node):
     @property
     def divergent(self) -> bool:
         return len(set(self.variants)) > 1
+
+    @property
+    def content_attrs(self) -> object:
+        return E.canonical(self.pred)
 
     def with_children(self, children):
         (c,) = children
@@ -191,6 +206,10 @@ class Project(Node):
     @property
     def divergent(self) -> bool:
         return len(set(self.variants)) > 1
+
+    @property
+    def content_attrs(self) -> object:
+        return self.cols
 
     def with_children(self, children):
         (c,) = children

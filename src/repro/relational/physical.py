@@ -38,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.cache import CacheManager
+from ..core.memory import MemoryPool
 from . import expr as E
 from . import logical as L
 from .fuse import FusedPipeline, fuse_plan
@@ -88,6 +89,10 @@ class ExecContext:
     catalog: Dict[str, TableStorage]
     cache: Optional[CacheManager] = None
     cache_plans: Dict[bytes, L.Node] = field(default_factory=dict)
+    # psi -> cost-model savings estimate (Eq. 3 value), forwarded to the
+    # memory manager at materialization time so benefit-per-byte
+    # eviction can rank CE entries
+    cache_values: Dict[bytes, float] = field(default_factory=dict)
     metrics: ExecMetrics = field(default_factory=ExecMetrics)
     # Optional sharding applied to row-dim of loaded columns.
     sharding: Optional[jax.sharding.Sharding] = None
@@ -100,8 +105,11 @@ class ExecContext:
     # FusedPipeline nodes (see relational.fuse)
     fuse: bool = True
     # device scan cache: (table, column, capacity, sharding) -> padded
-    # device array, shared across queries/batches (owned by the Session)
-    scan_cache: Optional[Dict[tuple, jnp.ndarray]] = None
+    # device array, shared across queries/batches.  Either a budgeted
+    # MemoryPool (Session default — evictable under the session-wide
+    # device budget) or a raw dict (unbounded; kept for tests and
+    # standalone ExecContexts).
+    scan_cache: Optional[object] = None
     # cardinality estimator (duck-typed RelationalCostModel) enabling
     # deferred host synchronization: output capacities are picked from
     # estimates so operator pipelines dispatch without a blocking
@@ -280,7 +288,17 @@ def _scan_cached(ctx: ExecContext, key: tuple, host_arr: np.ndarray,
             return hit
     dev = _device_put(_pad_rows(host_arr, cap), ctx)
     ctx.metrics.bytes_read_disk += host_arr.nbytes
-    if sc is not None:
+    if isinstance(sc, MemoryPool):
+        # budgeted admission: the entry's benefit is the re-read cost
+        # it saves per hit, in the SAME units as the CostModel's Eq. 3
+        # values that CE entries carry (per-byte columnar io + modeled
+        # disk latency), so benefit-per-byte eviction ranks the two
+        # pools consistently
+        nbytes = int(dev.size) * dev.dtype.itemsize
+        io = getattr(getattr(ctx.cost_model, "c", None), "io_col", 1e-9)
+        sc.put(key, dev, nbytes=nbytes,
+               benefit=host_arr.nbytes * (io + ctx.disk_latency_per_byte))
+    elif sc is not None:
         sc[key] = dev
     return dev
 
@@ -524,11 +542,50 @@ def _exec_sort(node: L.Sort, child: Table, ctx: ExecContext) -> Table:
     return Table(child.schema, cols, child.nrows)
 
 
+def _union_fn(key, names: Tuple[str, ...], l_cap: int, r_cap: int,
+              new_cap: int):
+    """All union output columns in ONE jitted call: concat live-row
+    masks, O(n) nonzero compaction, every column gathered through the
+    same selection (vs the seed's per-column argsort dispatches)."""
+    k = len(names)
+
+    def f(l_nrows, r_nrows, *cols):
+        mask = jnp.concatenate([jnp.arange(l_cap) < l_nrows,
+                                jnp.arange(r_cap) < r_nrows])
+        (sel,) = jnp.nonzero(mask, size=new_cap, fill_value=0)
+        outs = []
+        for lc, rc in zip(cols[:k], cols[k:]):
+            merged = jnp.concatenate([lc, rc], axis=0)
+            outs.append(jnp.take(merged, sel, axis=0))
+        return tuple(outs)
+
+    return jax.jit(f)
+
+
 def _exec_union(left: Table, right: Table, ctx: ExecContext) -> Table:
     total = left.nrows + right.nrows
+    names = left.schema.names
+    est = ctx.estimate("union", left.nrows, right.nrows)
+    if est is not None:
+        # deferred-sync path: output capacity from the sum of the input
+        # cardinality estimates, one fused dispatch for every column;
+        # the usual overflow guard recompacts if the estimate lied
+        def dispatch(new_cap: int):
+            key = ("union", names, left.capacity, right.capacity, new_cap)
+            fn = _cached(key, lambda: _union_fn(key, names, left.capacity,
+                                                right.capacity, new_cap))
+            return fn(jnp.int32(left.nrows), jnp.int32(right.nrows),
+                      *[left.columns[n] for n in names],
+                      *[right.columns[n] for n in names])
+
+        outs, total = _deferred_dispatch(
+            dispatch, est, left.capacity + right.capacity, total)
+        return Table(left.schema, dict(zip(names, outs)), total)
+
+    # seed eager path: exact-sized per-column argsort compaction
     cap = next_pow2(max(total, 1))
     cols = {}
-    for name in left.schema.names:
+    for name in names:
         a = left.columns[name][: left.capacity]
         b = right.columns[name][: right.capacity]
         mask = jnp.concatenate([
@@ -713,7 +770,8 @@ def _materialize_cache(node: L.Cache, ctx: ExecContext, req) -> Table:
         return existing
     table = _exec(node.child, ctx, req)
     ctx.cache.put(node.psi, table, nbytes=table.nbytes,
-                  est_bytes=table.logical_nbytes)
+                  est_bytes=table.logical_nbytes,
+                  benefit=ctx.cache_values.get(node.psi, 0.0))
     return table
 
 

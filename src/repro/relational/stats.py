@@ -375,6 +375,13 @@ class RelationalCostModel:
         denom = max(ndv_l, ndv_r, 1)
         return max(1, int(l_rows * r_rows / denom))
 
+    def union_estimate(self, l_rows: int, r_rows: int) -> int:
+        """Union output capacity = sum of the input cardinality
+        estimates (exact — union is append-only), letting the operator
+        dispatch one fused compaction instead of per-column eager
+        sizing (ROADMAP open item: deferred sync for Union)."""
+        return max(1, int(l_rows) + int(r_rows))
+
     def group_estimate(self, group_by: Tuple[str, ...],
                        in_rows: int) -> int:
         groups = 1.0

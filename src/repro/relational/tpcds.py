@@ -120,12 +120,14 @@ def generate_tpcds_catalog(scale_rows: int = 100_000, seed: int = 0
 
 
 def build_tpcds_session(scale_rows: int = 100_000, fmt: str = "columnar",
-                        budget_bytes: int = 1 << 30, seed: int = 0
-                        ) -> Session:
+                        budget_bytes: int = 1 << 30, seed: int = 0,
+                        **session_kw) -> Session:
+    """``session_kw`` forwards memory-hierarchy knobs (policy,
+    host_budget_bytes, retain_across_batches, ...) to the Session."""
     from .datagen import make_storage
 
     catalog = generate_tpcds_catalog(scale_rows, seed)
-    sess = Session(budget_bytes=budget_bytes)
+    sess = Session(budget_bytes=budget_bytes, **session_kw)
     for name, (schema, nrows, cols) in catalog.items():
         st, _ = make_storage(name, schema, nrows, fmt, cols=cols)
         sess.register(st, columnar_for_stats=cols)

@@ -19,13 +19,14 @@ from __future__ import annotations
 import time
 from dataclasses import dataclass, field
 from functools import partial
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..core.cache import CacheManager
+from ..core.memory import MemoryManager
 from ..core.candidates import generate_knapsack_items
 from ..core.costmodel import price_ces
 from ..core.covering import build_covering_expressions
@@ -90,10 +91,23 @@ class ServingReport:
         return self.tokens_prefilled / base
 
 
+def _state_to_host(payload):
+    """Spill a prefix state (cache pytree, n_tokens) HBM -> host DRAM."""
+    cache, n_tok = payload
+    return (jax.tree_util.tree_map(lambda a: np.asarray(a), cache), n_tok)
+
+
+def _state_to_device(payload):
+    cache, n_tok = payload
+    return (jax.tree_util.tree_map(jnp.asarray, cache), n_tok)
+
+
 class ServingEngine:
     def __init__(self, cfg: ArchConfig, params, *,
                  pool_budget_bytes: int, block_size: int = 64,
-                 max_len: int = 512, k: int = 2):
+                 max_len: int = 512, k: int = 2,
+                 policy: str = "lru",
+                 retain_states: bool = True):
         self.cfg = cfg
         self.params = params
         self.block_size = block_size
@@ -101,6 +115,23 @@ class ServingEngine:
         self.k = k
         self.cost_model = ServingCostModel(cfg)
         self.pool_budget = int(pool_budget_bytes)
+        # prefix states are admitted through the unified memory
+        # hierarchy: HBM budget enforced by the manager, eviction under
+        # pressure, spill tier = host DRAM offload of the KV/SSM state.
+        # Retained across batches (prefix fingerprints are Merkle chains
+        # over token CONTENT, so cross-batch reuse is exact) unless
+        # retain_states=False.
+        self.retain_states = retain_states
+        # host tier bounded at 4x HBM budget so a long-lived engine with
+        # retention cannot grow host DRAM without limit (same rationale
+        # as relational.Session)
+        self.memory = MemoryManager(self.pool_budget,
+                                    host_budget=4 * self.pool_budget,
+                                    policy=policy)
+        self.pool = CacheManager(
+            self.pool_budget, spill_fn=_state_to_host,
+            unspill_fn=_state_to_device, manager=self.memory,
+            pool="prefix")
 
     def _fresh_cache(self, batch: int = 1):
         return init_cache(self.cfg, batch, self.max_len,
@@ -117,9 +148,14 @@ class ServingEngine:
         report.tokens_prefilled_baseline = sum(len(r.prompt)
                                                for r in requests)
 
-        pool = CacheManager(self.pool_budget)
-        selected_by_psi: Dict[bytes, TokenBlock] = {}
-
+        if mqo:
+            if not self.retain_states:
+                self.pool.clear()
+            pool = self.pool
+        else:
+            # the no-MQO baseline stays cold: an empty throwaway pool,
+            # so retained states never leak into baseline measurements
+            pool = CacheManager(self.pool_budget)
         if mqo:
             t0 = time.perf_counter()
             ses = identify_shared_prefixes(requests, k=self.k)
@@ -134,6 +170,17 @@ class ServingEngine:
             # materialize admitted prefixes, chaining longer onto shorter
             for ce in sorted(sol.ces, key=lambda c: c.tree.n_tokens):
                 chain: TokenBlock = ce.tree
+                if pool.touch(ce.psi):
+                    # cross-batch hit: the state is already materialized
+                    # (prefix fingerprints are content-exact), skip the
+                    # prefill entirely — the full CE value is saved.
+                    # touch() refreshes LRU recency (so the entry is not
+                    # this batch's next eviction victim) WITHOUT paying
+                    # an unspill: consumers unspill/promote on demand in
+                    # _resume_point.
+                    report.prefill_flops_saved += ce.value * (
+                        self.cost_model.chips * 1.0)
+                    continue
                 anc_psi, anc_len = self._longest_cached_ancestor(
                     chain, pool)
                 if anc_psi is not None:
@@ -148,8 +195,8 @@ class ServingEngine:
                 pool.put(ce.psi, (cache, chain.n_tokens),
                          nbytes=self.cost_model.state_bytes(
                              chain.n_tokens),
-                         est_bytes=ce.weight)
-                selected_by_psi[ce.psi] = chain
+                         est_bytes=ce.weight,
+                         benefit=max(float(ce.value), 0.0))
                 report.prefill_flops_saved += ce.value * (
                     self.cost_model.chips * 1.0)
 

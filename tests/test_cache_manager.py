@@ -59,3 +59,30 @@ class TestAccounting:
         cm.put(b"b", "B", nbytes=60)
         assert cm.get(b"b") == "B"
         assert cm.stats.hits == 1
+
+    def test_no_promotion_without_headroom(self):
+        cm = _mk(100)
+        cm.put(b"a", "A", nbytes=60)
+        cm.put(b"b", "B", nbytes=60)          # spilled
+        cm.get(b"b")                          # 40 free < 60: stays spilled
+        assert cm.entry(b"b").spilled
+        assert cm.stats.used == 60 and cm.stats.spilled_bytes == 60
+        assert cm.stats.promotions == 0
+
+    def test_hit_promotes_spilled_entry_when_budget_frees(self):
+        """Satellite fix (ISSUE 2): a spilled entry used to be
+        re-unspilled on EVERY hit and never moved back to device even
+        when the budget freed up."""
+        cm = _mk(100)
+        cm.put(b"a", "A", nbytes=60)
+        cm.put(b"b", "B", nbytes=60)          # spilled
+        cm.evict(b"a")                        # headroom appears
+        assert cm.get(b"b") == "B"
+        e = cm.entry(b"b")
+        assert not e.spilled                  # promoted to device
+        assert cm.stats.used == 60
+        assert cm.stats.spilled_bytes == 0
+        assert cm.stats.promotions == 1
+        # subsequent hits read device-resident payload, no unspill work
+        assert cm.get(b"b") == "B"
+        assert cm.stats.promotions == 1

@@ -346,6 +346,57 @@ class TestReviewRegressions:
         np.testing.assert_array_equal(second["v"], v2)
 
 
+class TestUnionDeferred:
+    """Satellite (ISSUE 2): Union sizes its output from the sum of the
+    input cardinality estimates and compacts every column in one fused
+    dispatch — results must stay bit-identical to the seed eager path
+    (per-column argsort compaction, exact sizing)."""
+
+    def _union_plan(self, rng) -> L.Node:
+        left = (L.scan("t", SCHEMA, "columnar")
+                .filter(_random_pred(rng, {"k", "v", "x"}))
+                .project("k", "v"))
+        right = (L.scan("t", SCHEMA, "columnar")
+                 .filter(_random_pred(rng, {"k", "v", "x"}))
+                 .project("k", "v"))
+        plan = left.union(right)
+        if rng.integers(0, 2):
+            third = (L.scan("t", SCHEMA, "columnar")
+                     .filter(_random_pred(rng, {"k", "v", "x"}))
+                     .project("k", "v"))
+            plan = plan.union(third)
+        return plan
+
+    def test_randomized_unions_match_eager(self):
+        for case in range(8):
+            rng = np.random.default_rng(500 + case)
+            nrows = int(rng.integers(3, 1200))
+            st, cols = _toy(nrows=nrows, seed=case)
+            cm = _cost_model(cols, nrows)
+            plan = self._union_plan(rng)
+            eager = execute(plan, ExecContext(
+                catalog={"t": st}, fuse=False, defer_sync=False))
+            fused = execute(plan, ExecContext(
+                catalog={"t": st}, cost_model=cm))
+            _assert_tables_bit_identical(eager, fused)
+
+    def test_empty_sides(self):
+        st, cols = _toy(nrows=200, seed=1)
+        cm = _cost_model(cols, 200)
+        empty = (L.scan("t", SCHEMA, "columnar")
+                 .filter(E.and_(E.cmp("v", ">", 2000)))   # matches nothing
+                 .project("k", "v"))
+        full = (L.scan("t", SCHEMA, "columnar")
+                .filter(E.cmp("v", ">=", 0)).project("k", "v"))
+        for plan in (empty.union(full), full.union(empty),
+                     empty.union(empty)):
+            eager = execute(plan, ExecContext(
+                catalog={"t": st}, fuse=False, defer_sync=False))
+            fused = execute(plan, ExecContext(
+                catalog={"t": st}, cost_model=cm))
+            _assert_tables_bit_identical(eager, fused)
+
+
 class TestLocalOptimizerChains:
     """optimize_single output (the MQO input shape) also fuses cleanly."""
 

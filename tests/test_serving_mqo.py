@@ -101,6 +101,41 @@ class TestEngineExactness:
         assert cm.state_bytes(1000) == cm.state_bytes(10)
 
 
+class TestCrossBatchStateReuse:
+    def test_warm_batch_skips_prefill_of_retained_prefixes(self):
+        """ISSUE 2: prefix states admitted through the MemoryManager
+        are retained across run_batch calls — a repeat batch prefills
+        only what the pool does not already hold."""
+        cfg = _cfg()
+        params = init_params(cfg, 0)
+        eng = ServingEngine(cfg, params, pool_budget_bytes=1 << 22,
+                            block_size=32, max_len=192)
+
+        def mk():
+            return [GenerationRequest(r.request_id, r.prompt.copy(),
+                                      r.max_new_tokens)
+                    for r in _requests(cfg)]
+
+        base, _ = eng.run_batch(mk(), mqo=False)
+        cold, rep_cold = eng.run_batch(mk(), mqo=True)
+        warm, rep_warm = eng.run_batch(mk(), mqo=True)
+        assert rep_cold.n_selected >= 1
+        assert rep_warm.tokens_prefilled < rep_cold.tokens_prefilled
+        # exactness survives the warm path
+        assert all((a == b).all() for a, b in zip(base, cold))
+        assert all((a == b).all() for a, b in zip(base, warm))
+
+    def test_retain_states_off_restores_cold_batches(self):
+        cfg = _cfg()
+        params = init_params(cfg, 0)
+        eng = ServingEngine(cfg, params, pool_budget_bytes=1 << 22,
+                            block_size=32, max_len=192,
+                            retain_states=False)
+        _, rep1 = eng.run_batch(_requests(cfg), mqo=True)
+        _, rep2 = eng.run_batch(_requests(cfg), mqo=True)
+        assert rep2.tokens_prefilled == rep1.tokens_prefilled
+
+
 class TestArchWeights:
     def test_mla_lighter_than_gqa(self):
         gqa = ServingCostModel(get_config("granite-8b"))
