@@ -1,0 +1,142 @@
+"""Online QueryService windows (ISSUE 3 acceptance): interleaved
+arrivals through micro-batch windows with warm residents vs the cold
+one-shot batch.
+
+The recurring-dashboard workload of ``bench_batch_reuse`` — the
+scan-dominated F2 (high-value sales scans) + F5 (profitability scans)
+template families over the CSV fact table under the paper's ~200 MB/s
+disk profile — arrives as a STREAM: queries submitted one at a time in
+an interleaved family order, accumulated into count-closed windows of
+``MAX_BATCH``.  Because a recurring dashboard re-arrives in the same
+order, each warm window regenerates the same covering content an
+earlier window materialized; the strict-keyed CE cache keeps every
+window's CEs resident side by side and the window-level MCKP re-prices
+them as zero-weight already-paid items (plus single-query resident
+resume for windows left with one matching query).
+
+Measured (both sides are WALL time around the full call, so the
+windowed side's per-window optimize overhead is charged against it):
+  * ``cold_oneshot_s`` — a cold session's one-shot ``run_batch`` over
+    the whole dashboard (pays disk, CSV parse, CE materialization and
+    one optimizer pass);
+  * ``warm_windowed_s`` — steady-state windowed pass (best of
+    ``REPEATS``) on the long-lived session, including one optimizer
+    pass per window.
+
+Jit compilation is paid by a throwaway warmup session (as in
+bench_batch_reuse), so the comparison isolates the service/memory
+effect.
+
+Acceptance: windowed_warm_speedup = cold_oneshot_s / warm_windowed_s
+>= 1.3.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from common import csv_line, save_result
+from repro.relational import QueryService
+from repro.relational.tpcds import build_tpcds_session, tpcds_queries
+
+SCALE_ROWS = 120_000
+BUDGET = 1 << 30
+FMT = "csv"                 # parse is the shareable work CEs eliminate
+DISK_LATENCY = 5e-9         # paper §6.3 commodity-disk regime (~200 MB/s)
+MAX_BATCH = 4
+REPEATS = 5
+
+
+def _dashboard(qs):
+    """The recurring scan-heavy stream: F2 (10) + F5 (6) queries,
+    interleaved across the two families (arrival order is part of the
+    recurring pattern, so windows recur identically)."""
+    picked = qs[10:20] + qs[36:42]
+    order = np.random.default_rng(0).permutation(len(picked))
+    return [picked[i] for i in order]
+
+
+def _windowed_pass(svc: QueryService, queries) -> Dict:
+    t0 = time.perf_counter()
+    handles = [svc.submit(q) for q in queries]
+    svc.flush()
+    seconds = time.perf_counter() - t0
+    return {
+        "seconds": seconds,
+        "reused": sum(1 for h in handles
+                      if h.explain()["resident_reuse"]),
+        "handles": handles,
+    }
+
+
+def run() -> Dict:
+    # pay jit compilation once, outside the measured sessions
+    warmup = build_tpcds_session(scale_rows=SCALE_ROWS, fmt=FMT,
+                                 budget_bytes=BUDGET)
+    wq = _dashboard(tpcds_queries(warmup))
+    warmup.run_batch(wq, mqo=True)
+    wsvc = QueryService(warmup, max_batch=MAX_BATCH)
+    for q in wq:
+        wsvc.submit(q)
+    wsvc.flush()
+
+    # cold one-shot: fresh session, whole dashboard in one pre-closed
+    # window (this is also what primes the long-lived session); wall
+    # time so the one optimizer pass is charged like the windows' are
+    sess = build_tpcds_session(scale_rows=SCALE_ROWS, fmt=FMT,
+                               budget_bytes=BUDGET)
+    sess.disk_latency_per_byte = DISK_LATENCY
+    queries = _dashboard(tpcds_queries(sess))
+    t0 = time.perf_counter()
+    cold = sess.run_batch(queries, mqo=True)
+    cold_wall = time.perf_counter() - t0
+
+    # online service on the SAME long-lived session: first windowed
+    # pass materializes the window-level CEs, steady state reuses them
+    svc = QueryService(sess, max_batch=MAX_BATCH)
+    prime = _windowed_pass(svc, queries)
+    warm_passes = [_windowed_pass(svc, queries) for _ in range(REPEATS)]
+    warm = min(warm_passes, key=lambda p: p["seconds"])
+
+    # correctness: the streamed results match independent execution
+    base = sess.run_batch(queries, mqo=False)
+    for b, h in zip(base.results, warm["handles"]):
+        assert b.table.row_multiset() == h.result().row_multiset()
+
+    n = len(queries)
+    out = {
+        "scale_rows": SCALE_ROWS, "fmt": FMT,
+        "disk_latency_per_byte": DISK_LATENCY,
+        "n_queries": n, "max_batch": MAX_BATCH,
+        "cold_oneshot_s": cold_wall,
+        "cold_exec_s": cold.total_seconds,
+        "cold_optimize_s": cold.optimize_seconds,
+        "prime_windowed_s": prime["seconds"],
+        "warm_windowed_s": warm["seconds"],
+        "warm_pass_seconds": [p["seconds"] for p in warm_passes],
+        "windowed_warm_speedup": cold_wall
+        / max(warm["seconds"], 1e-12),
+        "warm_throughput_qps": n / max(warm["seconds"], 1e-12),
+        "cold_throughput_qps": n / max(cold_wall, 1e-12),
+        "warm_reused_handles": warm["reused"],
+        "memory": {k: v for k, v in sess.memory.report().items()
+                   if k != "pools"},
+    }
+    save_result("service_windows", out)
+    return out
+
+
+def main() -> List[str]:
+    out = run()
+    return [csv_line(
+        "service_windows", out["warm_windowed_s"],
+        f"cold_oneshot_s={out['cold_oneshot_s']:.3f};"
+        f"warm_windowed_s={out['warm_windowed_s']:.3f};"
+        f"speedup={out['windowed_warm_speedup']:.2f};"
+        f"reused={out['warm_reused_handles']}/{out['n_queries']}")]
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

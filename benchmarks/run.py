@@ -11,6 +11,9 @@ Prints ``name,us_per_call,derived`` CSV lines.
   bench_mckp              paper §6.2      (optimizer overhead < 2 s)
   bench_batch_reuse       beyond-paper    (cold vs warm repeat batch,
                           cross-batch CE retention per policy — PR 2)
+  bench_service           beyond-paper    (online QueryService windows:
+                          interleaved arrivals + warm residents vs the
+                          cold one-shot batch — PR 3)
   bench_serving_prefix    beyond-paper    (LLM prefix-cache MQO)
   roofline_report         assignment      (dry-run roofline terms)
 
@@ -36,6 +39,7 @@ MODULES = [
     "bench_window",
     "bench_macro_tpcds",
     "bench_batch_reuse",
+    "bench_service",
     "bench_serving_prefix",
     "roofline_report",
 ]

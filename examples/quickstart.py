@@ -15,7 +15,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro.relational import (I32, STR, Schema, Session, expr as E,
+from repro.relational import (I32, STR, MemoryConfig, QueryService, Schema,
+                              Session, SessionConfig, expr as E,
                               logical as L, make_storage)
 
 
@@ -59,7 +60,10 @@ def build_catalog(sess: Session, seed: int = 7):
 
 
 def main():
-    sess = Session(budget_bytes=64 << 20)
+    # one frozen config instead of the legacy knob sprawl (the old
+    # keyword arguments still work as deprecation shims)
+    sess = Session.from_config(SessionConfig(
+        memory=MemoryConfig(budget_bytes=64 << 20)))
     build_catalog(sess)
     emp, dept, sal = (sess.table("employees"), sess.table("departments"),
                       sess.table("salaries"))
@@ -103,6 +107,19 @@ def main():
     print(f"aggregate: {base.total_seconds:.3f}s -> "
           f"{opt.total_seconds:.3f}s "
           f"({opt.total_seconds / base.total_seconds:.2f}x)")
+
+    # -- the online front-end: continuous submission, lazy handles ------
+    # clients submit at any time; the service closes a micro-batch
+    # window on count (here), deadline, or flush(), runs the MQO per
+    # window, and re-prices still-resident covering relations as
+    # already-paid — a recurring query resumes from cache.
+    svc = QueryService(sess, max_batch=3)
+    h1, h2, h3 = svc.submit(q1), svc.submit(q2), svc.submit(q3)
+    print(f"\nQueryService: window closed on count, "
+          f"h1 rows={h1.result().nrows}")
+    e = h1.explain()
+    print(f"h1 explain: window={e['window']} ces={len(e['ces'])} "
+          f"resident_reuse={e['resident_reuse']}")
 
 
 if __name__ == "__main__":

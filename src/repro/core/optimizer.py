@@ -31,6 +31,7 @@ class MQOReport:
     n_valid_ces: int = 0
     n_items: int = 0
     n_resident: int = 0
+    n_single_resume: int = 0
     n_selected: int = 0
     selected_value: float = 0.0
     selected_weight: int = 0
@@ -69,24 +70,49 @@ class MultiQueryOptimizer:
         self.chain_cache_plans = chain_cache_plans
 
     def optimize(self, plans: Sequence[PlanNode], *,
-                 resident: Optional[Mapping[bytes, bytes]] = None
+                 resident: Optional[Mapping[bytes, object]] = None
                  ) -> OptimizedBatch:
         """Run the four phases.  ``resident`` maps the ψ of every CE
-        still materialized from a previous batch (the unified
-        MemoryManager's CE pool) to the strict fingerprint of the tree
-        that was materialized.  A new CE whose ψ AND strict content
-        both match is re-priced as a zero-weight, already-paid knapsack
-        item — its C_E and C_W were spent by batch *k*, so batch *k+1*
-        pays only the reads and per-consumer extraction.  (ψ alone is
-        loose: same structure, possibly different merged predicates —
-        the strict check is what makes reuse sound.)  This turns
-        per-batch MQO into cross-batch work sharing on recurring
-        workloads."""
+        still materialized from a previous window (the unified
+        MemoryManager's CE pool) to the strict fingerprint(s) of the
+        tree(s) that were materialized — a single ``bytes`` value or a
+        collection of them (several same-structure CEs with different
+        merged predicates can be resident at once under strict-keyed
+        caching).  A new CE whose ψ AND strict content both match is
+        re-priced as a zero-weight, already-paid knapsack item — its
+        C_E and C_W were spent by window *k*, so window *k+1* pays only
+        the reads and per-consumer extraction.  (ψ alone is loose: same
+        structure, possibly different merged predicates — the strict
+        check is what makes reuse sound.)  This turns per-window MQO
+        into cross-window work sharing on recurring workloads.
+
+        Single-query resident resume: subexpressions with fewer than
+        ``k`` consumers in THIS window are normally never candidates,
+        but when their ψ matches a resident CE they are admitted as
+        single-member SEs — a lone recurring query can resume from a
+        still-resident covering relation instead of recomputing
+        (non-matching singles price at negative value and drop out)."""
         t0 = time.perf_counter()
         report = MQOReport(n_queries=len(plans), budget=self.budget)
+        res: Mapping[bytes, frozenset] = {}
+        if resident:
+            res = {psi: (frozenset((s,)) if isinstance(s, bytes)
+                         else frozenset(s))
+                   for psi, s in resident.items()}
 
         # Phase 1: similar subexpression identification (Algorithm 1).
-        ses = identify_similar_subexpressions(plans, k=self.k)
+        if res and self.k > 1:
+            # one k=1 walk, partitioned: the >= k SEs are exactly what
+            # identify(k=self.k) returns (k only filters at the end),
+            # and sub-k SEs whose structure matches a resident CE are
+            # admitted too, so the strict content check below can
+            # decide single-query resident resume
+            every = identify_similar_subexpressions(plans, k=1)
+            ses = [se for se in every if se.m >= self.k]
+            ses += [se for se in every
+                    if se.m < self.k and se.psi in res]
+        else:
+            ses = identify_similar_subexpressions(plans, k=self.k)
         report.n_ses = len(ses)
 
         # Phase 2a: covering expressions (+ plan-type specific transform:
@@ -100,15 +126,17 @@ class MultiQueryOptimizer:
 
         # Phase 2b: pricing (Eq. 1–3) + Algorithm 2 candidate groups.
         price_ces(ces, self.cost_model)
-        if resident:
+        if res:
             for ce in ces:
                 # cheap psi membership first — the strict content hash
                 # (a full Merkle walk, memoized on the CE) only runs
                 # for actual candidates
-                if (ce.psi in resident
-                        and resident[ce.psi] == ce.strict_psi()):
+                if (ce.psi in res
+                        and ce.strict_psi() in res[ce.psi]):
                     price_resident_ce(ce)
                     report.n_resident += 1
+                    if ce.m < self.k:
+                        report.n_single_resume += 1
         items = generate_knapsack_items(
             ces, max_compound_size=self.max_compound_size)
         report.n_items = len(items)

@@ -30,6 +30,14 @@ class Rewriter(Protocol):
         """Plan producing ``member``'s output from the cached CE output."""
         ...
 
+    # Optional: concrete rewriters may also provide
+    #   cache_key(ce) -> bytes
+    # the runtime cache identity of a CE's materialized output.  The
+    # default is the loose structural psi; the relational rewriter uses
+    # the STRICT content fingerprint so same-structure CEs with
+    # different merged predicates (recurring micro-batch windows over a
+    # template family) can stay resident side by side.
+
 
 @dataclass
 class RewrittenBatch:
@@ -67,10 +75,15 @@ def rewrite_batch(
     new_plans = [_replace_nodes(p, repl) for p in plans]
 
     # Cache plans; larger CEs may consume smaller selected CEs' caches.
+    # Keys come from the rewriter's cache identity (loose psi by
+    # default; see Rewriter.cache_key) and must be computed on the
+    # ORIGINAL covering tree, before any chaining substitution below.
+    key_fn = getattr(rewriter, "cache_key", None) or (lambda ce: ce.psi)
     cache_plans: Dict[bytes, PlanNode] = {}
     ordered = sorted(selected, key=lambda ce: tree_size(ce.tree))
     built: List[CoveringExpression] = []
     for ce in ordered:
+        cache_key = key_fn(ce)
         tree = ce.tree
         if chain_cache_plans and built:
             from .fingerprint import all_fingerprints
@@ -87,7 +100,7 @@ def rewrite_batch(
                                 small, node)
             if inner_repl:
                 tree = _replace_nodes(tree, inner_repl)
-        cache_plans[ce.psi] = rewriter.make_cache_plan(
+        cache_plans[cache_key] = rewriter.make_cache_plan(
             ce if tree is ce.tree else _with_tree(ce, tree))
         built.append(ce)
 
@@ -112,4 +125,9 @@ def _with_tree(ce: CoveringExpression, tree: PlanNode) -> CoveringExpression:
     clone = CoveringExpression(se=ce.se, tree=tree, psi=ce.psi)
     clone.value, clone.weight, clone.est_rows = ce.value, ce.weight, ce.est_rows
     clone.cost_detail = ce.cost_detail
+    # the chained tree computes the SAME relation (inner CachedScan
+    # substitutions are output-preserving), so it keeps the original
+    # tree's content identity — recomputing it on the substituted tree
+    # would diverge from the consumers' cache keys
+    clone._strict_psi = ce.strict_psi()
     return clone

@@ -1,6 +1,8 @@
 # SparkSQL-analog relational substrate: columnar tables over JAX arrays,
 # logical plans, Catalyst-like local optimization, cardinality stats,
-# eager per-operator SPMD execution, and the MQO integration.
+# eager per-operator SPMD execution, the MQO integration, and the
+# online QueryService front-end (continuous submission + micro-batch
+# MQO windows).
 from . import expr, logical
 from .datagen import generate_columns, make_storage, people_schema, synthetic_schema
 from .executor import BatchResult, QueryResult, Session
@@ -9,5 +11,7 @@ from .physical import ExecContext, ExecMetrics, TableStorage, execute
 from .rewriter import RelationalRewriter, make_ce_transform
 from .rules import optimize_single
 from .schema import F32, I32, STR, ColType, Schema, Table, next_pow2
+from .service import (ExecutionConfig, MemoryConfig, MqoConfig,
+                      QueryHandle, QueryService, SessionConfig)
 from .stats import (RelationalCostModel, StatsRegistry, build_table_stats,
                     required_columns, selectivity)

@@ -5,8 +5,17 @@ batch, and executes cache plans + rewritten queries on the cluster.
 Memory (PR 2, see ROADMAP "Memory hierarchy"): the session owns ONE
 budget-aware :class:`~repro.core.memory.MemoryManager`; the CE cache
 and the device scan cache are pools of it, CEs are retained across
-batches (``retain_across_batches``), and the next batch's MCKP
-re-prices still-resident CEs as zero-weight already-paid items.
+batches (``retain_across_batches``), and each window's MCKP re-prices
+still-resident CEs as zero-weight already-paid items.
+
+Entry points (PR 3, see ROADMAP "Query service"): the online front-end
+is :class:`~repro.relational.service.QueryService` (continuous
+``submit`` + micro-batch windows); ``run_batch`` here is the one-shot
+path, routed through the same window machinery as a pre-closed window.
+Configuration lives in one frozen
+:class:`~repro.relational.service.SessionConfig`; the individual
+keyword arguments of ``Session(...)`` are retained as deprecation
+shims so existing call sites keep working.
 """
 from __future__ import annotations
 
@@ -18,13 +27,14 @@ import jax
 import numpy as np
 
 from ..core.cache import CacheManager
-from ..core.memory import MemoryManager
-from ..core.optimizer import MultiQueryOptimizer, OptimizedBatch
+from ..core.memory import DEVICE, MemoryManager
+from ..core.optimizer import OptimizedBatch
 from . import logical as L
 from .physical import ExecContext, ExecMetrics, TableStorage, execute
-from .rewriter import RelationalRewriter, make_ce_transform
 from .rules import optimize_single
 from .schema import Table
+from .service import (ExecutionConfig, MemoryConfig, QueryService,
+                      SessionConfig)
 from .stats import RelationalCostModel, StatsRegistry, build_table_stats
 
 
@@ -64,7 +74,12 @@ def _unspill(table: Table) -> Table:
 
 
 class Session:
-    """Catalog + stats + cache + MQO — the paper's prototype server."""
+    """Catalog + stats + cache + MQO — the paper's prototype server.
+
+    Prefer ``Session.from_config(SessionConfig(...))``; the individual
+    keyword arguments below predate :class:`SessionConfig` and are kept
+    as deprecation shims (they are folded into ``self.config``).
+    """
 
     def __init__(self, budget_bytes: int = 1 << 30,
                  sharding: Optional[jax.sharding.Sharding] = None,
@@ -74,40 +89,88 @@ class Session:
                  use_scan_cache: bool = True,
                  policy: str = "lru",
                  host_budget_bytes: Optional[int] = None,
-                 retain_across_batches: bool = True):
+                 retain_across_batches: bool = True,
+                 config: Optional[SessionConfig] = None):
+        if config is not None:
+            # a config must be the WHOLE configuration — mixing it with
+            # legacy knobs would silently drop whichever loses
+            passed = dict(
+                budget_bytes=budget_bytes, sharding=sharding,
+                disk_latency_per_byte=disk_latency_per_byte, fuse=fuse,
+                defer_sync=defer_sync, use_scan_cache=use_scan_cache,
+                policy=policy, host_budget_bytes=host_budget_bytes,
+                retain_across_batches=retain_across_batches)
+            defaults = dict(
+                budget_bytes=1 << 30, sharding=None,
+                disk_latency_per_byte=0.0, fuse=True, defer_sync=True,
+                use_scan_cache=True, policy="lru",
+                host_budget_bytes=None, retain_across_batches=True)
+            clashing = [k for k, v in passed.items() if v != defaults[k]]
+            if clashing:
+                raise ValueError(
+                    f"pass either config= or the legacy keyword "
+                    f"arguments, not both (got {clashing})")
+        if config is None:
+            # deprecation shim: fold the legacy knob sprawl into the
+            # unified config (execution / memory / mqo sub-configs)
+            config = SessionConfig(
+                execution=ExecutionConfig(
+                    fuse=fuse, defer_sync=defer_sync,
+                    use_scan_cache=use_scan_cache, sharding=sharding,
+                    disk_latency_per_byte=disk_latency_per_byte),
+                memory=MemoryConfig(
+                    budget_bytes=int(budget_bytes),
+                    host_budget_bytes=host_budget_bytes,
+                    policy=policy,
+                    retain_across_batches=retain_across_batches),
+            )
+        self.config = config
+        ex, mem = config.execution, config.memory
+
         self.catalog: Dict[str, TableStorage] = {}
         self.stats = StatsRegistry()
-        self.budget = int(budget_bytes)
-        self.sharding = sharding
-        self.disk_latency_per_byte = disk_latency_per_byte
+        self.budget = int(mem.budget_bytes)
         self.cost_model = RelationalCostModel(self.stats)
-        # execution-path knobs (fuse=False, defer_sync=False,
-        # use_scan_cache=False reproduces the seed eager executor)
-        self.fuse = fuse
-        self.defer_sync = defer_sync
-        self.use_scan_cache = use_scan_cache
+        # execution-path knobs, mirrored as mutable attributes (bench
+        # harnesses tweak e.g. disk_latency_per_byte post-construction;
+        # self.config stays the frozen construction-time record)
+        self.sharding = ex.sharding
+        self.disk_latency_per_byte = ex.disk_latency_per_byte
+        self.fuse = ex.fuse
+        self.defer_sync = ex.defer_sync
+        self.use_scan_cache = ex.use_scan_cache
+        self.use_pallas_filter = ex.use_pallas_filter
         # One budget-aware memory hierarchy for everything the session
         # materializes on device (see core.memory): the CE cache spills
         # device -> host -> drop; evicted scan columns just drop (their
         # source host arrays still live in the catalog).  The host tier
         # is bounded too (default 4x the device budget) so a long-lived
         # session with retention cannot grow host RAM without limit.
-        self.retain_across_batches = retain_across_batches
-        if host_budget_bytes is None:
-            host_budget_bytes = 4 * self.budget
+        self.retain_across_batches = mem.retain_across_batches
+        host_budget = mem.host_budget_bytes
+        if host_budget is None:
+            host_budget = 4 * self.budget
         self.memory = MemoryManager(self.budget,
-                                    host_budget=host_budget_bytes,
-                                    policy=policy)
+                                    host_budget=host_budget,
+                                    policy=mem.policy)
         self._scan_pool = self.memory.pool("scan")
         self._ce_cache = CacheManager(
             self.budget, spill_fn=_spill_to_host, unspill_fn=_unspill,
             manager=self.memory, pool="ce")
-        # psi -> strict content fingerprint of the covering tree that
-        # was materialized, retained so stale residents (same loose psi,
-        # different covering content) are detected across batches.
+        # strict content fingerprint -> loose psi, for every covering
+        # relation materialized by an earlier window.  Strict keys are
+        # the CACHE identity (several same-structure CEs with different
+        # merged predicates stay resident side by side); the loose psi
+        # is kept as the optimizer's cheap membership pre-filter.
         # Cache PLANS need no retention: rewrite_batch regenerates a
-        # fresh, intra-batch-consistent plan for every selected CE.
-        self._resident_strict: Dict[bytes, bytes] = {}
+        # fresh, intra-window-consistent plan for every selected CE.
+        self._resident_index: Dict[bytes, bytes] = {}
+        # lazily-created QueryService backing the one-shot run_batch
+        self._oneshot: Optional[QueryService] = None
+
+    @classmethod
+    def from_config(cls, config: SessionConfig) -> "Session":
+        return cls(config=config)
 
     # -- catalog management -------------------------------------------------
     def register(self, storage: TableStorage,
@@ -119,7 +182,7 @@ class Session:
         # stale too (CE plans can join across tables — drop them all)
         if storage.name in self.catalog:
             self._ce_cache.clear()
-            self._resident_strict.clear()
+            self._resident_index.clear()
         self.catalog[storage.name] = storage
         cols = storage.columnar if storage.columnar is not None \
             else columnar_for_stats
@@ -134,18 +197,42 @@ class Session:
 
     # -- execution ------------------------------------------------------------
     def _fresh_ctx(self, cache: Optional[CacheManager] = None) -> ExecContext:
-        return ExecContext(
-            catalog=self.catalog, cache=cache,
-            sharding=self.sharding,
-            disk_latency_per_byte=self.disk_latency_per_byte,
-            fuse=self.fuse,
-            defer_sync=self.defer_sync,
+        # the session itself quacks like an ExecutionConfig (the knobs
+        # are mirrored as attributes above)
+        return ExecContext.from_exec_config(
+            self.catalog, self, cache=cache,
             cost_model=self.cost_model,
             scan_cache=self._scan_pool if self.use_scan_cache else None)
 
     def clear_scan_cache(self) -> None:
         """Drop memoized device scan buffers (e.g. after data changes)."""
         self._scan_pool.clear()
+
+    def service(self, **kw) -> QueryService:
+        """A new online front-end over this session (continuous
+        ``submit`` + micro-batch MQO windows; see relational.service)."""
+        return QueryService(self, **kw)
+
+    def planning_capacity(self, budget: Optional[int] = None) -> int:
+        """MCKP capacity for the next window: the device bytes new CE
+        materializations can actually claim.  Bytes other pools hold
+        (scan columns, serving prefix states) and bytes already pinned
+        under retained resident CEs are subtracted from the device
+        budget — planning with the full session budget would admit CEs
+        the hierarchy immediately spills (ROADMAP open item)."""
+        budget = self.budget if budget is None else int(budget)
+        if budget <= 0 or not self.config.mqo.pressure_aware:
+            return budget
+        mm = self.memory
+        ce_pool = mm.pools.get("ce")
+        ce_dev = ce_pool.stats.used if ce_pool is not None else 0
+        other = mm.device_used - ce_dev
+        retained = 0
+        if ce_pool is not None and self._resident_index:
+            retained = sum(e.nbytes for e in ce_pool.entries.values()
+                           if e.tier == DEVICE
+                           and e.key in self._resident_index)
+        return max(0, min(budget, mm.device_budget - other - retained))
 
     def run_one(self, plan: L.Node,
                 ctx: Optional[ExecContext] = None) -> QueryResult:
@@ -159,12 +246,18 @@ class Session:
         self,
         plans: Sequence[L.Node],
         *,
-        mqo: bool = True,
-        k: int = 2,
+        mqo: Optional[bool] = None,
+        k: Optional[int] = None,
         budget_bytes: Optional[int] = None,
-        locally_optimize: bool = True,
+        locally_optimize: Optional[bool] = None,
     ) -> BatchResult:
         """Execute a batch of queries, with or without worksharing.
+
+        The one-shot path is a *pre-closed* QueryService window, so it
+        shares the online front-end's machinery bit for bit.  ``mqo`` /
+        ``k`` / ``locally_optimize`` default to ``config.mqo``
+        (``enabled`` / ``k`` / ``locally_optimize``); pass a value to
+        override for this batch only.
 
         ``budget_bytes`` overrides the *planning* budget (MCKP
         capacity) for this batch only; actual admission is always
@@ -172,61 +265,11 @@ class Session:
         budget.  A zero planning budget also disables cross-batch
         resident reuse — it is the "no caching at all" baseline.
         """
-        if locally_optimize:
-            plans = [optimize_single(p) for p in plans]
-
-        if not mqo:
-            ctx = self._fresh_ctx()
-            t0 = time.perf_counter()
-            results = [self.run_one(p, ctx) for p in plans]
-            return BatchResult(results, time.perf_counter() - t0,
-                               metrics=ctx.metrics)
-
-        budget = budget_bytes if budget_bytes is not None else self.budget
-        optimizer = MultiQueryOptimizer(
-            cost_model=self.cost_model,
-            rewriter=RelationalRewriter(fuse_residuals=self.fuse),
-            budget_bytes=budget,
-            k=k,
-            ce_transform=make_ce_transform(),
-        )
-        if not self.retain_across_batches:
-            self._ce_cache.clear()
-            self._resident_strict.clear()
-        else:
-            # prune metadata for entries the hierarchy has dropped —
-            # this dict must not grow with the workload's history
-            for psi in [psi for psi in self._resident_strict
-                        if not self._ce_cache.contains(psi)]:
-                del self._resident_strict[psi]
-        resident = {} if budget <= 0 else dict(self._resident_strict)
-        optimized = optimizer.optimize(list(plans), resident=resident)
-
-        cache = self._ce_cache
-        # a selected CE whose loose psi collides with a retained entry
-        # of DIFFERENT covering content must not read the stale bytes
-        for ce in optimized.rewritten.ces:
-            sfp = ce.strict_psi()        # memoized on the CE
-            if self._resident_strict.get(ce.psi, sfp) != sfp:
-                cache.evict(ce.psi)
-            self._resident_strict[ce.psi] = sfp
-        ctx = self._fresh_ctx(cache)
-        ctx.cache_plans = dict(optimized.rewritten.cache_plans)
-        # benefit-per-byte eviction ranks entries by the cost model's
-        # savings estimate (Eq. 3 value at admission time)
-        ctx.cache_values = {ce.psi: max(float(ce.value), 0.0)
-                            for ce in optimized.rewritten.ces}
-
-        t0 = time.perf_counter()
-        results = [self.run_one(p, ctx) for p in optimized.rewritten.plans]
-        total = time.perf_counter() - t0
-        return BatchResult(
-            results, total,
-            optimize_seconds=optimized.report.optimize_seconds,
-            mqo=optimized,
-            cache_report=cache.report(),
-            metrics=ctx.metrics,
-        )
+        if self._oneshot is None:
+            self._oneshot = QueryService(self)
+        return self._oneshot.run_closed(
+            plans, mqo=mqo, k=k, budget_bytes=budget_bytes,
+            locally_optimize=locally_optimize)
 
     # -- naive full-input caching (the paper's "FC" baseline) --------------
     def run_batch_fullcache(self, plans: Sequence[L.Node],

@@ -127,6 +127,27 @@ class ExecContext:
             return None
         return int(fn(*args))
 
+    @classmethod
+    def from_exec_config(cls, catalog: Dict[str, "TableStorage"], cfg,
+                         *, cache: Optional[CacheManager] = None,
+                         cost_model: Optional[object] = None,
+                         scan_cache: Optional[object] = None
+                         ) -> "ExecContext":
+        """Build a context from anything shaped like an
+        ``relational.service.ExecutionConfig`` (a Session mirrors the
+        same attributes) — the single place execution-path knobs are
+        translated into a context."""
+        return cls(
+            catalog=catalog, cache=cache,
+            sharding=getattr(cfg, "sharding", None),
+            disk_latency_per_byte=getattr(cfg, "disk_latency_per_byte",
+                                          0.0),
+            use_pallas_filter=getattr(cfg, "use_pallas_filter", False),
+            fuse=cfg.fuse,
+            defer_sync=cfg.defer_sync,
+            cost_model=cost_model,
+            scan_cache=scan_cache)
+
 
 # ---------------------------------------------------------------------------
 # jitted primitives (cached per static signature)
@@ -525,7 +546,53 @@ def _exec_aggregate(node: L.Aggregate, child: Table,
     return Table(node.schema, cols, n_groups)
 
 
+def _sort_fn(key, by_idx: int, in_cap: int, new_cap: int, desc: bool):
+    """All sort output columns in ONE jitted call: sentinel-mask the
+    key, stable argsort, gather every column through the same order,
+    slice to ``new_cap``.  Valid rows sort ahead of the sentinel
+    padding, so a slice of ``new_cap >= nrows`` keeps every live row
+    (matching the eager path's live-row order bit for bit)."""
+    def f(nrows, *cols):
+        k = cols[by_idx]
+        valid = jnp.arange(in_cap) < nrows
+        if desc:
+            k = -k
+        if k.dtype == jnp.int32:
+            k = jnp.where(valid, k, I32_SENTINEL)
+        else:
+            k = jnp.where(valid, k, jnp.inf)
+        sel = jnp.argsort(k, stable=True)[:new_cap]
+        return tuple(jnp.take(c, sel, axis=0) for c in cols)
+
+    return jax.jit(f)
+
+
 def _exec_sort(node: L.Sort, child: Table, ctx: ExecContext) -> Table:
+    names = child.schema.names
+    est = ctx.estimate("sort", child.nrows)
+    if est is not None:
+        # deferred-sync path: the output capacity comes from the cost
+        # model's cardinality estimate (exact for sort — cardinality is
+        # preserved) instead of carrying the child's full padded
+        # capacity forward, and every column is gathered inside one
+        # jitted dispatch; the usual overflow guard recompacts if the
+        # estimate ever lied
+        by_idx = names.index(node.by)
+
+        def dispatch(new_cap: int):
+            fkey = ("sort", names, node.by, bool(node.desc),
+                    child.capacity, new_cap,
+                    str(child.columns[node.by].dtype))
+            fn = _cached(fkey, lambda: _sort_fn(
+                fkey, by_idx, child.capacity, new_cap, bool(node.desc)))
+            return fn(jnp.int32(child.nrows),
+                      *[child.columns[n] for n in names])
+
+        outs, _ = _deferred_dispatch(dispatch, est, child.capacity,
+                                     child.nrows)
+        return Table(child.schema, dict(zip(names, outs)), child.nrows)
+
+    # seed eager path: full-capacity order, one gather per column
     key = child.columns[node.by]
     if node.desc:
         if key.dtype == jnp.int32:

@@ -121,12 +121,21 @@ class RelationalRewriter:
     def __init__(self, fuse_residuals: bool = False):
         self.fuse_residuals = fuse_residuals
 
+    @staticmethod
+    def cache_key(ce: CoveringExpression) -> bytes:
+        """Runtime cache identity: the STRICT content fingerprint, so
+        same-structure CEs with different merged predicates (recurring
+        windows over a template family) coexist in the cache instead of
+        colliding on the loose psi and evicting one another."""
+        return ce.strict_psi()
+
     def make_cache_plan(self, ce: CoveringExpression) -> L.Node:
-        return L.Cache(child=ce.tree, psi=ce.psi)
+        return L.Cache(child=ce.tree, psi=self.cache_key(ce))
 
     def make_extraction(self, ce: CoveringExpression,
                         member: L.Node) -> L.Node:
-        cached = L.CachedScan(psi=ce.psi, _schema=ce.tree.schema,
+        cached = L.CachedScan(psi=self.cache_key(ce),
+                              _schema=ce.tree.schema,
                               source_label=ce.tree.label)
         preds: List[E.Expr] = []
         _collect_divergent(ce.tree, member, preds)

@@ -1,0 +1,456 @@
+"""Online query service: continuous submission + micro-batch MQO windows.
+
+The paper's §5 prototype is a *server*: clients submit queries at any
+time, the server accumulates them, optimizes each accumulated batch
+with the multi-query optimizer, executes, and returns results.  This
+module is that front-end:
+
+    svc = QueryService(session, max_batch=8, max_wait_s=0.05)
+    h = svc.submit(plan)          # returns immediately: a lazy handle
+    ...
+    table = h.result()            # resolves (closing the window if open)
+    h.explain()                   # chosen plan, matched CE/SE, reuse
+
+**Window lifecycle.**  The first ``submit`` after a flush opens a
+window.  The window *closes* (runs the MQO over its queries, executes,
+and resolves every handle, in submission order) when any of:
+
+  * it holds ``max_batch`` queries (count trigger, closes inside the
+    submitting call);
+  * ``max_wait_s`` has elapsed since the window opened — checked on
+    every ``submit``/``poll``/``result`` (the service is cooperative:
+    no background threads, so a deadline fires at the next call);
+  * ``flush()`` is called explicitly, or ``result()`` is called on a
+    handle still sitting in the open window.
+
+The one-shot ``Session.run_batch`` is routed through this same
+machinery as a *pre-closed* window (``run_closed``), so online and
+batch execution share one code path — and are bit-identical on the
+same plan set.
+
+**Cross-window reuse.**  Each window's MCKP re-prices covering
+expressions whose content is still resident from ANY earlier window as
+zero-weight already-paid items.  CE cache entries are keyed by the
+*strict* content fingerprint (not the loose structural ψ), so several
+same-structure/different-predicate CEs — the signature of a recurring
+windowed workload, where each window merges a different subset of a
+template family — stay resident side by side instead of evicting one
+another.  A window with a single matching query (fewer than ``k``
+consumers) can still resume from a resident CE (single-query resident
+resume; see ``core.optimizer``).
+
+**SessionConfig.**  The session's former eight orthogonal constructor
+knobs are grouped into one frozen :class:`SessionConfig` (``execution``
+/ ``memory`` / ``mqo`` sub-configs); ``Session.from_config`` builds a
+session from it and the legacy keyword arguments remain as deprecation
+shims.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, List, Optional, Sequence, Set
+
+from ..core.optimizer import MultiQueryOptimizer
+from . import logical as L
+from .rewriter import RelationalRewriter, make_ce_transform
+from .rules import optimize_single
+
+_UNSET = object()
+
+
+# ---------------------------------------------------------------------------
+# unified session configuration
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ExecutionConfig:
+    """Physical execution-path knobs (ROADMAP "Execution paths").
+
+    ``fuse=False, defer_sync=False, use_scan_cache=False`` reproduces
+    the seed eager executor.
+    """
+
+    fuse: bool = True
+    defer_sync: bool = True
+    use_scan_cache: bool = True
+    use_pallas_filter: bool = False
+    sharding: Optional[Any] = None          # jax.sharding.Sharding
+    disk_latency_per_byte: float = 0.0
+
+
+@dataclass(frozen=True)
+class MemoryConfig:
+    """Memory-hierarchy knobs (ROADMAP "Memory hierarchy")."""
+
+    budget_bytes: int = 1 << 30
+    host_budget_bytes: Optional[int] = None   # None -> 4x device budget
+    policy: str = "lru"                       # lru | benefit | admission
+    retain_across_batches: bool = True
+
+
+@dataclass(frozen=True)
+class MqoConfig:
+    """Multi-query-optimizer defaults applied per window."""
+
+    enabled: bool = True
+    k: int = 2                      # SE consumer threshold (Algorithm 1)
+    locally_optimize: bool = True   # Catalyst-like single-query pass first
+    max_compound_size: int = 4      # Algorithm 2 compound bound
+    chain_cache_plans: bool = True  # larger CEs read smaller CEs' caches
+    # Feed MemoryManager headroom (budget minus bytes other pools and
+    # retained residents already hold) into the MCKP instead of the full
+    # session budget, so planning stops over-admitting CEs the hierarchy
+    # would immediately spill.
+    pressure_aware: bool = True
+
+
+@dataclass(frozen=True)
+class SessionConfig:
+    """Everything a Session needs, in one frozen value.
+
+    Build variants with :func:`dataclasses.replace` on the sub-configs:
+
+        cfg = SessionConfig(memory=MemoryConfig(budget_bytes=1 << 26))
+        sess = Session.from_config(cfg)
+    """
+
+    execution: ExecutionConfig = field(default_factory=ExecutionConfig)
+    memory: MemoryConfig = field(default_factory=MemoryConfig)
+    mqo: MqoConfig = field(default_factory=MqoConfig)
+
+    def with_execution(self, **kw) -> "SessionConfig":
+        return replace(self, execution=replace(self.execution, **kw))
+
+    def with_memory(self, **kw) -> "SessionConfig":
+        return replace(self, memory=replace(self.memory, **kw))
+
+    def with_mqo(self, **kw) -> "SessionConfig":
+        return replace(self, mqo=replace(self.mqo, **kw))
+
+
+# ---------------------------------------------------------------------------
+# lazy handles
+# ---------------------------------------------------------------------------
+class QueryHandle:
+    """A submitted query: resolves when its micro-batch window runs."""
+
+    __slots__ = ("plan", "seq", "_service", "_query_result", "_explain",
+                 "_done")
+
+    def __init__(self, service: "QueryService", plan: L.Node, seq: int):
+        self._service = service
+        self.plan = plan
+        self.seq = seq                  # submission order, service-wide
+        self._query_result = None
+        self._explain = None
+        self._done = False
+
+    @property
+    def done(self) -> bool:
+        return self._done
+
+    def result(self):
+        """The query's output Table, forcing the window closed if this
+        handle is still sitting in it (laziness must not deadlock)."""
+        if not self._done:
+            self._service._force(self)
+        if not self._done:
+            raise RuntimeError("handle was not resolved by its window")
+        return self._query_result.table
+
+    @property
+    def query_result(self):
+        """The full QueryResult (table + seconds + executed plan)."""
+        if not self._done:
+            self.result()
+        return self._query_result
+
+    def explain(self) -> dict:
+        """Post-execution report: the chosen (rewritten) logical plan,
+        every CE the plan consumes with its SE provenance, and whether
+        each CE read hit an already-resident cache entry.  Rendered
+        lazily — resolution stores only the ingredients, so windows
+        (and run_batch) never pay for explains nobody asks for."""
+        if not self._done:
+            raise RuntimeError(
+                "query still pending — call result(), flush() or poll()")
+        if callable(self._explain):
+            self._explain = self._explain()
+        return dict(self._explain)
+
+    def _resolve(self, query_result, explain: dict) -> None:
+        self._query_result = query_result
+        self._explain = explain
+        self._done = True
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        state = "done" if self._done else "pending"
+        return f"QueryHandle(seq={self.seq}, {state})"
+
+
+# ---------------------------------------------------------------------------
+# the service
+# ---------------------------------------------------------------------------
+class QueryService:
+    """Continuous-submission front-end over a :class:`Session`.
+
+    Windows are cooperative (no threads): deadlines are checked on
+    every ``submit`` / ``poll`` / ``result`` call.  ``clock`` is
+    injectable for deterministic deadline tests.
+    """
+
+    def __init__(self, session, *,
+                 max_batch: int = 8,
+                 max_wait_s: Optional[float] = None,
+                 mqo: Optional[bool] = None,
+                 k: Optional[int] = None,
+                 locally_optimize: Optional[bool] = None,
+                 budget_bytes: Optional[int] = None,
+                 clock=time.monotonic):
+        mcfg = session.config.mqo
+        self.session = session
+        self.max_batch = max(1, int(max_batch))
+        self.max_wait_s = max_wait_s
+        self.mqo = mcfg.enabled if mqo is None else bool(mqo)
+        self.k = mcfg.k if k is None else int(k)
+        self.locally_optimize = (mcfg.locally_optimize
+                                 if locally_optimize is None
+                                 else bool(locally_optimize))
+        self.budget_bytes = budget_bytes
+        self._clock = clock
+        self._pending: List[QueryHandle] = []
+        self._opened_at: Optional[float] = None
+        self._n_windows = 0
+        self._n_submitted = 0
+
+    # -- submission ----------------------------------------------------------
+    def submit(self, plan: L.Node) -> QueryHandle:
+        """Add one query to the open window (opening one if needed).
+
+        Returns immediately with a lazy :class:`QueryHandle`.  If the
+        previous window's deadline has passed, it is flushed first (its
+        queries were due); if this arrival fills the window to
+        ``max_batch``, the window closes inside this call.
+        """
+        self._flush_if_due()
+        handle = QueryHandle(self, plan, self._n_submitted)
+        self._n_submitted += 1
+        if not self._pending:
+            self._opened_at = self._clock()
+        self._pending.append(handle)
+        if len(self._pending) >= self.max_batch:
+            self.flush()
+        return handle
+
+    def poll(self) -> bool:
+        """Deadline check: closes the open window if ``max_wait_s`` has
+        elapsed.  Returns True when a window ran."""
+        return self._flush_if_due()
+
+    @property
+    def pending(self) -> int:
+        return len(self._pending)
+
+    def flush(self):
+        """Close the open window now; resolves its handles.  Returns
+        the window's BatchResult, or None when nothing was pending."""
+        handles, self._pending = self._pending, []
+        self._opened_at = None
+        if not handles:
+            return None
+        return self._run_window(handles)
+
+    def run_closed(self, plans: Sequence[L.Node], *,
+                   mqo: Optional[bool] = None,
+                   k: Optional[int] = None,
+                   budget_bytes: Any = _UNSET,
+                   locally_optimize: Optional[bool] = None):
+        """The one-shot path: a pre-closed window over ``plans`` (no
+        accumulation, independent of the open window).  This is what
+        ``Session.run_batch`` routes through."""
+        handles = [QueryHandle(self, p, -1) for p in plans]
+        return self._run_window(handles, mqo=mqo, k=k,
+                                budget_bytes=budget_bytes,
+                                locally_optimize=locally_optimize)
+
+    # -- internals -----------------------------------------------------------
+    def _flush_if_due(self) -> bool:
+        if (self._pending and self.max_wait_s is not None
+                and self._clock() - self._opened_at >= self.max_wait_s):
+            self.flush()
+            return True
+        return False
+
+    def _force(self, handle: QueryHandle) -> None:
+        self._flush_if_due()
+        if not handle._done and any(h is handle for h in self._pending):
+            self.flush()
+
+    def _run_window(self, handles: List[QueryHandle], *,
+                    mqo: Optional[bool] = None,
+                    k: Optional[int] = None,
+                    budget_bytes: Any = _UNSET,
+                    locally_optimize: Optional[bool] = None):
+        from .executor import BatchResult
+
+        sess = self.session
+        window = self._n_windows
+        self._n_windows += 1
+        mqo = self.mqo if mqo is None else mqo
+        k = self.k if k is None else k
+        local = (self.locally_optimize if locally_optimize is None
+                 else locally_optimize)
+        budget_req = (self.budget_bytes if budget_bytes is _UNSET
+                      else budget_bytes)
+
+        plans = [h.plan for h in handles]
+        if local:
+            plans = [optimize_single(p) for p in plans]
+
+        if not mqo:
+            ctx = sess._fresh_ctx()
+            t0 = time.perf_counter()
+            results = [sess.run_one(p, ctx) for p in plans]
+            batch = BatchResult(results, time.perf_counter() - t0,
+                                metrics=ctx.metrics)
+            self._resolve(handles, batch, window, mqo=False, k=k,
+                          executed_plans=plans, ce_by_key={},
+                          pre_resident=frozenset())
+            return batch
+
+        budget = budget_req if budget_req is not None else sess.budget
+        cache = sess._ce_cache
+        if not sess.retain_across_batches:
+            # clear BEFORE computing the planning capacity: the freed
+            # CE bytes are available to this window's MCKP
+            cache.clear()
+            sess._resident_index.clear()
+        else:
+            # prune metadata for entries the hierarchy has dropped —
+            # this dict must not grow with the workload's history
+            for sfp in [s for s in sess._resident_index
+                        if not cache.contains(s)]:
+                del sess._resident_index[sfp]
+        capacity = sess.planning_capacity(budget)
+        optimizer = MultiQueryOptimizer(
+            cost_model=sess.cost_model,
+            rewriter=RelationalRewriter(fuse_residuals=sess.fuse),
+            budget_bytes=capacity,
+            k=k,
+            ce_transform=make_ce_transform(),
+            max_compound_size=sess.config.mqo.max_compound_size,
+            chain_cache_plans=sess.config.mqo.chain_cache_plans,
+        )
+        # loose psi -> strict fingerprints of every resident covering
+        # relation with that structure (a zero planning budget disables
+        # resident reuse — it is the "no caching at all" baseline)
+        resident: Dict[bytes, Set[bytes]] = {}
+        if budget > 0:
+            for sfp, psi in sess._resident_index.items():
+                resident.setdefault(psi, set()).add(sfp)
+        optimized = optimizer.optimize(list(plans), resident=resident)
+
+        ces = optimized.rewritten.ces
+        # strict keys cannot collide across content, so no stale-entry
+        # eviction is needed; record which selected CEs are already
+        # materialized BEFORE this window executes (handle.explain)
+        pre_resident = frozenset(ce.strict_psi() for ce in ces
+                                 if cache.contains(ce.strict_psi()))
+        if sess.retain_across_batches:
+            for ce in ces:
+                sess._resident_index[ce.strict_psi()] = ce.psi
+        ctx = sess._fresh_ctx(cache)
+        ctx.cache_plans = dict(optimized.rewritten.cache_plans)
+        # benefit-per-byte eviction ranks entries by the cost model's
+        # savings estimate (Eq. 3 value at admission time)
+        ctx.cache_values = {ce.strict_psi(): max(float(ce.value), 0.0)
+                            for ce in ces}
+
+        t0 = time.perf_counter()
+        results = [sess.run_one(p, ctx) for p in optimized.rewritten.plans]
+        total = time.perf_counter() - t0
+        batch = BatchResult(
+            results, total,
+            optimize_seconds=optimized.report.optimize_seconds,
+            mqo=optimized,
+            cache_report=cache.report(),
+            metrics=ctx.metrics,
+        )
+        ce_by_key = {ce.strict_psi(): ce for ce in ces}
+        self._resolve(handles, batch, window, mqo=True, k=k,
+                      executed_plans=optimized.rewritten.plans,
+                      ce_by_key=ce_by_key, pre_resident=pre_resident)
+        return batch
+
+    def _resolve(self, handles, batch, window, *, mqo, k,
+                 executed_plans, ce_by_key, pre_resident) -> None:
+        n = len(handles)
+        for i, (h, qr) in enumerate(zip(handles, batch.results)):
+            h._resolve(qr, _LazyExplain(
+                h, qr, window, i, n, bool(mqo), k,
+                executed_plans[i], ce_by_key, pre_resident))
+
+
+class _LazyExplain:
+    """Deferred explain rendering: holds the window's ingredients and
+    builds the report dict on first ``handle.explain()`` call."""
+
+    __slots__ = ("handle", "qr", "window", "position", "window_size",
+                 "mqo", "k", "executed_plan", "ce_by_key", "pre_resident")
+
+    def __init__(self, handle, qr, window, position, window_size, mqo, k,
+                 executed_plan, ce_by_key, pre_resident):
+        self.handle = handle
+        self.qr = qr
+        self.window = window
+        self.position = position
+        self.window_size = window_size
+        self.mqo = mqo
+        self.k = k
+        self.executed_plan = executed_plan
+        self.ce_by_key = ce_by_key
+        self.pre_resident = pre_resident
+
+    def __call__(self) -> dict:
+        ce_reports = []
+        for key in _cached_scan_keys(self.executed_plan):
+            ce = self.ce_by_key.get(key)
+            if ce is None:
+                continue           # e.g. full-relation keys (not a CE)
+            resident_repriced = bool(ce.cost_detail.get("resident", False))
+            ce_reports.append({
+                "psi": ce.psi.hex()[:12],
+                "strict_psi": key.hex()[:12],
+                "label": ce.tree.label,
+                "m": ce.m,
+                "value": float(ce.value),
+                "weight": int(ce.weight),
+                "resident_repriced": resident_repriced,
+                "cache_hit": key in self.pre_resident,
+                "single_resume": resident_repriced and ce.m < self.k,
+            })
+        return {
+            "status": "done",
+            "window": self.window,
+            "position": self.position,
+            "window_size": self.window_size,
+            "mqo": self.mqo,
+            "seconds": self.qr.seconds,
+            "plan": L.explain(self.qr.plan),
+            "submitted": L.explain(self.handle.plan),
+            "ces": ce_reports,
+            "resident_reuse": any(c["cache_hit"] for c in ce_reports),
+        }
+
+
+def _cached_scan_keys(plan: L.Node) -> List[bytes]:
+    """Cache keys of every CachedScan the executed plan reads (fused
+    pipelines expose their source leaf through ``children``)."""
+    keys: List[bytes] = []
+    stack = [plan]
+    while stack:
+        node = stack.pop()
+        if isinstance(node, L.CachedScan):
+            keys.append(node.psi)
+        stack.extend(node.children)
+    return keys

@@ -382,6 +382,13 @@ class RelationalCostModel:
         sizing (ROADMAP open item: deferred sync for Union)."""
         return max(1, int(l_rows) + int(r_rows))
 
+    def sort_estimate(self, in_rows: int) -> int:
+        """Sort preserves cardinality, so the estimate is exact; it
+        exists so the fused sort path sizes its output from the input
+        cardinality (like filter/join/aggregate/union) instead of
+        carrying the child's full padded capacity forward."""
+        return max(1, int(in_rows))
+
     def group_estimate(self, group_by: Tuple[str, ...],
                        in_rows: int) -> int:
         groups = 1.0

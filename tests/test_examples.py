@@ -25,11 +25,13 @@ class TestExamples:
         out = _run("quickstart.py")
         assert "identical=True" in out
         assert "selected" in out
+        assert "QueryService" in out          # online front-end snippet
 
     def test_analytics_server(self):
         out = _run("analytics_server.py", "--window", "6",
                    "--scale-rows", "20000")
         assert "aggregate ratio" in out
+        assert "warm speedup over cold" in out
 
     def test_llm_serving_mqo(self):
         out = _run("llm_serving_mqo.py", "--requests", "6")

@@ -176,3 +176,49 @@ class TestPropertyMQONeverChangesResults:
                 f"query {i} diverged (budget=2^{budget_log2})\n" + \
                 L.explain(queries[i])
         assert opt.mqo.report.selected_weight <= (1 << budget_log2)
+
+
+class TestPropertyServiceEqualsOneShot:
+    """ISSUE 3: the online QueryService is the same machinery as
+    run_batch — for ANY workload and ANY window size, submitting the
+    queries one at a time and letting windows close must produce the
+    same result per query as the legacy one-shot batch."""
+
+    @settings(max_examples=15, deadline=None,
+              suppress_health_check=list(HealthCheck))
+    @given(queries=st.lists(_query(), min_size=2, max_size=6),
+           max_batch=st.integers(1, 6))
+    def test_windowed_submit_equals_run_batch(self, fuzz_session,
+                                              queries, max_batch):
+        from repro.relational import QueryService
+
+        base = fuzz_session.run_batch(queries, mqo=True)
+        svc = QueryService(fuzz_session, max_batch=max_batch)
+        handles = [svc.submit(q) for q in queries]
+        svc.flush()                       # close the trailing window
+        for i, (b, h) in enumerate(zip(base.results, handles)):
+            assert h.done
+            assert b.table.row_multiset() == h.result().row_multiset(), \
+                f"query {i} diverged (window={max_batch})\n" + \
+                L.explain(queries[i])
+
+    @settings(max_examples=10, deadline=None,
+              suppress_health_check=list(HealthCheck))
+    @given(queries=st.lists(_query(), min_size=2, max_size=4))
+    def test_pre_closed_window_bit_identical(self, fuzz_session, queries):
+        """submit-then-flush in one window vs run_batch on the same
+        plans: exactly equal arrays, not just equal multisets."""
+        from repro.relational import QueryService
+
+        batch = fuzz_session.run_batch(queries, mqo=True)
+        svc = QueryService(fuzz_session, max_batch=len(queries) + 1)
+        handles = [svc.submit(q) for q in queries]
+        svc.flush()
+        for qr, h in zip(batch.results, handles):
+            ta, tb = qr.table, h.result()
+            assert ta.nrows == tb.nrows
+            assert ta.schema.names == tb.schema.names
+            for n in ta.schema.names:
+                assert np.array_equal(
+                    np.asarray(ta.columns[n])[: ta.nrows],
+                    np.asarray(tb.columns[n])[: tb.nrows]), n
