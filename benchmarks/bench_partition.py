@@ -1,0 +1,176 @@
+"""Partition-grained caching (ISSUE 4 acceptance): the selective
+dashboard stream under a budget that cannot hold a full CE.
+
+The workload is a RECURRING selective dashboard over one partitioned
+CSV fact table (range partitioning on ``n1``): one window-sized
+template of 4 selective queries (every filter keeps < 40% of the
+table, all in the hot ``n1`` range) arrives over and over.  Each
+window's MQO merges the template into one covering scan+filter CE
+whose live partitions are a strict subset of the table (pruning) — and
+the session budget is sized BELOW the full CE weight, so the whole-CE
+knapsack of PR 2/3 could admit nothing at all.  The partition-grained
+MCKP instead admits the hot fraction: a strict subset of the CE's
+partitions, which stays resident across windows; the cold remainder is
+recomputed per window (composed at read time).
+
+Measured (wall time around the full streamed pass, as in
+bench_batch_reuse's cold-vs-warm-repeat):
+  * ``cold_stream_s`` — first streamed pass on a fresh session: every
+    window pays disk + CSV parse for all live partitions, plus the
+    partial materialization;
+  * ``warm_stream_s`` — steady-state repeat (best of ``REPEATS``):
+    resident partitions are re-priced as zero-weight items and read
+    from cache; only the non-admitted partitions re-pay disk + parse.
+
+Acceptance (BENCH_pr4.json):
+  * the optimizer admits a STRICT subset of the CE's live partitions;
+  * partition_warm_speedup = cold_stream_s / warm_stream_s >= 1.3.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+from common import csv_line, save_result
+from repro.relational import (MemoryConfig, Partitioning, QueryService,
+                              Session, SessionConfig, expr as E,
+                              make_storage)
+from repro.relational.datagen import generate_columns, synthetic_schema
+
+SCALE_ROWS = 120_000
+FMT = "csv"                 # parse is the shareable work CEs eliminate
+DISK_LATENCY = 5e-9         # paper §6.3 commodity-disk regime (~200 MB/s)
+N_PARTITIONS = 8
+MAX_BATCH = 4               # one dashboard template per window
+N_WINDOWS = 4               # windows per streamed pass
+REPEATS = 5
+BUDGET_FRACTION = 0.7       # of the full CE weight: forces partial
+                            # admission (strict subset of partitions)
+
+SCHEMA = synthetic_schema(n_int=6, n_dbl=4, n_str=2)
+COLS = generate_columns(SCHEMA, SCALE_ROWS, seed=4)
+
+
+def build_session(budget_bytes: int) -> Session:
+    sess = Session.from_config(SessionConfig(
+        memory=MemoryConfig(budget_bytes=budget_bytes)))
+    sess.disk_latency_per_byte = DISK_LATENCY
+    st, _ = make_storage("fact", SCHEMA, SCALE_ROWS, FMT, cols=COLS)
+    sess.register(st, columnar_for_stats=COLS,
+                  partitioning=Partitioning("n1", "range", N_PARTITIONS))
+    return sess
+
+
+def _template(sess: Session):
+    """One window's worth of the recurring dashboard: 4 selective
+    queries sharing the scan+filter SE (n1 uniform in [1, 1000], every
+    threshold keeps the hot < 40% — pruning leaves ~half the
+    partitions live)."""
+    t = lambda: sess.table("fact")
+    return [
+        t().filter(E.cmp("n1", "<", 250))
+        .project("n1", "n2", "n3", "d1"),
+        t().filter(E.and_(E.cmp("n1", "<", 300), E.cmp("d1", "<", 0.9)))
+        .project("n1", "n2", "d1", "d2"),
+        t().filter(E.cmp("n1", "<", 350)).project("n1", "n4", "d3"),
+        t().filter(E.and_(E.cmp("n1", "<", 400), E.cmp("n2", ">", 100)))
+        .project("n1", "n2", "n5"),
+    ]
+
+
+def _stream(sess: Session):
+    return _template(sess) * N_WINDOWS
+
+
+def probe_full_ce_weight() -> int:
+    """Full CE weight (sum of its partition slices) of one template
+    window under an unconstrained budget — what the acceptance budget
+    must undercut."""
+    sess = build_session(1 << 30)
+    r = sess.run_batch(_template(sess), mqo=True)
+    weights = [sum(sl.weight for sl in ce.partition_detail[1])
+               for ce in r.mqo.rewritten.ces if ce.partition_detail]
+    return max(weights) if weights else 0
+
+
+def _streamed_pass(svc: QueryService, queries) -> Dict:
+    t0 = time.perf_counter()
+    handles = [svc.submit(q) for q in queries]
+    svc.flush()
+    return {"seconds": time.perf_counter() - t0, "handles": handles}
+
+
+def run() -> Dict:
+    full_ce_w = probe_full_ce_weight()
+    # the budget cannot hold one full CE: whole-CE admission of PR 2/3
+    # would have nothing to select at all
+    budget = max(int(full_ce_w * BUDGET_FRACTION), 1 << 16)
+
+    # jit warmup on a throwaway session (as in bench_service)
+    warm_sess = build_session(budget)
+    wsvc = QueryService(warm_sess, max_batch=MAX_BATCH)
+    for q in _stream(warm_sess):
+        wsvc.submit(q)
+    wsvc.flush()
+
+    # cold streamed pass: fresh session, every window pays in full
+    sess = build_session(budget)
+    queries = _stream(sess)
+    svc = QueryService(sess, max_batch=MAX_BATCH)
+    cold = _streamed_pass(svc, queries)
+
+    # partial admission must be real: a strict subset of live parts
+    partial = []
+    for h in cold["handles"]:
+        for ce in h.explain()["ces"]:
+            if "partitions" in ce:
+                partial.append(ce["partitions"])
+        break
+    strict_subset = any(0 < len(p["admitted"]) < len(p["live"])
+                        for p in partial)
+
+    # steady-state repeats on the long-lived session
+    warm_passes = [_streamed_pass(svc, queries) for _ in range(REPEATS)]
+    warm = min(warm_passes, key=lambda p: p["seconds"])
+
+    # correctness: streamed results match independent execution
+    base = sess.run_batch(_template(sess), mqo=False)
+    for b, h in zip(base.results, warm["handles"][-MAX_BATCH:]):
+        assert b.table.row_multiset() == h.result().row_multiset()
+
+    resident = {k.hex()[:12]: sorted(v)
+                for k, v in sess.ce_resident_parts().items()}
+    out = {
+        "scale_rows": SCALE_ROWS, "fmt": FMT,
+        "disk_latency_per_byte": DISK_LATENCY,
+        "n_partitions": N_PARTITIONS,
+        "n_queries": len(queries), "max_batch": MAX_BATCH,
+        "full_ce_weight": full_ce_w,
+        "budget_bytes": budget,
+        "partition_admission": partial,
+        "admitted_strict_subset": strict_subset,
+        "resident_parts": resident,
+        "cold_stream_s": cold["seconds"],
+        "warm_stream_s": warm["seconds"],
+        "warm_pass_seconds": [p["seconds"] for p in warm_passes],
+        "partition_warm_speedup": cold["seconds"]
+        / max(warm["seconds"], 1e-12),
+        "accept_speedup_ge_1_3": cold["seconds"]
+        / max(warm["seconds"], 1e-12) >= 1.3,
+    }
+    save_result("bench_partition", out)
+    return out
+
+
+def main():
+    out = run()
+    yield csv_line("partition_cold_stream", out["cold_stream_s"],
+                   f"budget={out['budget_bytes']}")
+    yield csv_line("partition_warm_stream", out["warm_stream_s"],
+                   f"speedup={out['partition_warm_speedup']:.2f}x "
+                   f"subset={out['admitted_strict_subset']}")
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

@@ -14,6 +14,10 @@ Prints ``name,us_per_call,derived`` CSV lines.
   bench_service           beyond-paper    (online QueryService windows:
                           interleaved arrivals + warm residents vs the
                           cold one-shot batch — PR 3)
+  bench_partition         beyond-paper    (partition-grained MCKP on
+                          the selective dashboard: partial admission
+                          under a sub-CE budget, warm partial
+                          residency vs cold — PR 4)
   bench_serving_prefix    beyond-paper    (LLM prefix-cache MQO)
   roofline_report         assignment      (dry-run roofline terms)
 
@@ -40,6 +44,7 @@ MODULES = [
     "bench_macro_tpcds",
     "bench_batch_reuse",
     "bench_service",
+    "bench_partition",
     "bench_serving_prefix",
     "roofline_report",
 ]

@@ -76,6 +76,12 @@ class CacheManager:
         already-paid."""
         return frozenset(self._pool.keys())
 
+    def keys(self):
+        """Every live cache key: whole-CE entries are ``bytes`` strict
+        fingerprints, partition-grained entries are ``(strict, pid)``
+        tuples (see relational.partition)."""
+        return self._pool.keys()
+
     # -- maintenance ---------------------------------------------------------
     def evict(self, psi: bytes) -> None:
         self._pool.evict(psi)

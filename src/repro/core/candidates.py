@@ -37,6 +37,30 @@ class KnapsackItem:
         return f"Item(g={self.group}, [{labels}], v={self.value:.3g}, w={self.weight})"
 
 
+@dataclass(frozen=True)
+class PartitionKnapsackItem:
+    """One PARTITION of a partition-grained CE as its own knapsack
+    option (its own group — partitions of a CE are independently
+    admissible, which is what lets the solver keep the hot fraction of
+    a CE when the whole CE does not fit).  Duck-types KnapsackItem for
+    the solver: value/weight are the partition's slice prices, ``ces``
+    exposes the parent CE for MCKPSolution bookkeeping."""
+
+    ce: CoveringExpression
+    pid: int
+    value: float
+    weight: int
+    group: int
+
+    @property
+    def ces(self) -> Tuple[CoveringExpression, ...]:
+        return (self.ce,)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return (f"PartItem(g={self.group}, {self.ce.tree.label}#p{self.pid}, "
+                f"v={self.value:.3g}, w={self.weight})")
+
+
 def _is_descendant(child: CoveringExpression, parent: CoveringExpression) -> bool:
     """child ⊂ parent: child's fingerprint appears as a proper sub-tree
     fingerprint of the parent's covering tree."""

@@ -36,6 +36,12 @@ class CoveringExpression:
     # memoized strict content fingerprint of the covering tree (filled
     # lazily by strict_psi(); cross-batch retention identity)
     _strict_psi: Optional[Fingerprint] = None
+    # Partition-grained admission (see repro.relational.partition): a
+    # plan-type-specific partitioner may split this CE into independent
+    # per-partition MCKP items; the solver then fills the subset it
+    # admitted.  None for unpartitioned CEs.
+    partition_detail: Optional[object] = None    # (plan record, slices)
+    admitted_partitions: Optional[frozenset] = None
 
     def strict_psi(self) -> Fingerprint:
         if self._strict_psi is None:

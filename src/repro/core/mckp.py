@@ -17,6 +17,16 @@ an exact transformation (choosing nothing from the transformed group
 means choosing the baseline) and keeps the capacity axis reserved for
 bytes that still need materializing.
 
+Partition-grained CEs (repro.relational.partition) feed the solver one
+item PER PARTITION, each in its own singleton group
+(candidates.PartitionKnapsackItem): partitions of a CE are
+independently admissible, so under a budget that cannot hold the full
+CE the DP admits a strict subset — the CE's hot fraction — and a
+partition already resident from an earlier window arrives as a
+zero-weight item and rides the same baseline lifting.  The solver only
+sees the (value, weight, group) protocol; nothing here is
+partition-specific.
+
 ``solve_bruteforce`` enumerates all choices and is used by property
 tests to validate the DP.
 """

@@ -14,7 +14,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, List, Mapping, Optional, Sequence
 
-from .candidates import generate_knapsack_items
+from .candidates import PartitionKnapsackItem, generate_knapsack_items
 from .costmodel import CostModel, price_ces, price_resident_ce
 from .covering import CoveringExpression, build_covering_expressions
 from .identify import identify_similar_subexpressions
@@ -32,6 +32,9 @@ class MQOReport:
     n_items: int = 0
     n_resident: int = 0
     n_single_resume: int = 0
+    n_partitioned: int = 0        # CEs split into per-partition items
+    n_partition_items: int = 0
+    n_resident_parts: int = 0     # partitions re-priced as already paid
     n_selected: int = 0
     selected_value: float = 0.0
     selected_weight: int = 0
@@ -60,6 +63,8 @@ class MultiQueryOptimizer:
         ] = None,
         max_compound_size: int = 4,
         chain_cache_plans: bool = True,
+        partitioner: Optional[Callable[[CoveringExpression],
+                                       Optional[tuple]]] = None,
     ):
         self.cost_model = cost_model
         self.rewriter = rewriter
@@ -68,9 +73,15 @@ class MultiQueryOptimizer:
         self.ce_transform = ce_transform
         self.max_compound_size = max_compound_size
         self.chain_cache_plans = chain_cache_plans
+        # plan-type-specific hook splitting an eligible CE into
+        # independent per-partition knapsack items (see
+        # repro.relational.partition.make_ce_partitioner); returns
+        # (plan_record, [slices]) or None
+        self.partitioner = partitioner
 
     def optimize(self, plans: Sequence[PlanNode], *,
-                 resident: Optional[Mapping[bytes, object]] = None
+                 resident: Optional[Mapping[bytes, object]] = None,
+                 resident_parts: Optional[Mapping[bytes, object]] = None
                  ) -> OptimizedBatch:
         """Run the four phases.  ``resident`` maps the ψ of every CE
         still materialized from a previous window (the unified
@@ -126,24 +137,81 @@ class MultiQueryOptimizer:
 
         # Phase 2b: pricing (Eq. 1–3) + Algorithm 2 candidate groups.
         price_ces(ces, self.cost_model)
+
+        # Partition-grained admission: split eligible CEs into
+        # independent per-partition items so the solver can keep the
+        # hot fraction of a CE the budget cannot hold whole.  Only CEs
+        # structurally disjoint from every other CE are split — a
+        # nested CE stays in its Algorithm 2 group, where mutual
+        # exclusion with its ancestors/descendants is what keeps
+        # value/weight additive.  Must run BEFORE resident re-pricing:
+        # a partitioned CE's residency is per partition, so whole-CE
+        # re-pricing (which assumes all bytes are resident) would be
+        # unsound for it.
+        partitioned: List[CoveringExpression] = []
+        if self.partitioner is not None:
+            for ce in ces:
+                if any(o is not ce and (ce.psi in o.fp_set
+                                        or o.psi in ce.fp_set)
+                       for o in ces):
+                    continue
+                detail = self.partitioner(ce)
+                if detail is not None:
+                    ce.partition_detail = detail
+                    partitioned.append(ce)
+        report.n_partitioned = len(partitioned)
+
         if res:
             for ce in ces:
                 # cheap psi membership first — the strict content hash
                 # (a full Merkle walk, memoized on the CE) only runs
                 # for actual candidates
-                if (ce.psi in res
+                if (ce.partition_detail is None and ce.psi in res
                         and ce.strict_psi() in res[ce.psi]):
                     price_resident_ce(ce)
                     report.n_resident += 1
                     if ce.m < self.k:
                         report.n_single_resume += 1
         items = generate_knapsack_items(
-            ces, max_compound_size=self.max_compound_size)
+            [ce for ce in ces if ce.partition_detail is None],
+            max_compound_size=self.max_compound_size)
+        gid = 1 + max((it.group for it in items), default=-1)
+        rp = resident_parts or {}
+        for ce in partitioned:
+            _, slices = ce.partition_detail
+            res_pids = rp.get(ce.strict_psi(), frozenset())
+            for sl in slices:
+                if sl.pid in res_pids:
+                    # this partition's bytes are already materialized:
+                    # C_E and C_W are sunk, weight is zero (the
+                    # per-partition analog of price_resident_ce)
+                    item = PartitionKnapsackItem(
+                        ce, sl.pid, value=max(sl.resident_value, 1e-12),
+                        weight=0, group=gid)
+                    report.n_resident_parts += 1
+                else:
+                    item = PartitionKnapsackItem(
+                        ce, sl.pid, value=sl.value, weight=sl.weight,
+                        group=gid)
+                gid += 1
+                if item.value > 0:
+                    items.append(item)
         report.n_items = len(items)
+        report.n_partition_items = sum(
+            1 for it in items if isinstance(it, PartitionKnapsackItem))
 
         # Phase 3: sharing-plan selection (MCKP, Eq. 5).
         solution = solve_mckp(items, self.budget)
-        selected: List[CoveringExpression] = solution.ces
+        for it in solution.items:
+            if isinstance(it, PartitionKnapsackItem):
+                have = it.ce.admitted_partitions or frozenset()
+                it.ce.admitted_partitions = have | {it.pid}
+        selected: List[CoveringExpression] = []
+        seen_ids = set()
+        for ce in solution.ces:
+            if id(ce) not in seen_ids:
+                seen_ids.add(id(ce))
+                selected.append(ce)
         report.n_selected = len(selected)
         report.selected_value = solution.total_value
         report.selected_weight = solution.total_weight

@@ -7,6 +7,9 @@ from . import expr, logical
 from .datagen import generate_columns, make_storage, people_schema, synthetic_schema
 from .executor import BatchResult, QueryResult, Session
 from .fuse import FusedPipeline, fuse_plan
+from .partition import (CePartition, PartitionInfo, PartitionedCePlan,
+                        Partitioning, make_ce_partitioner, partition_table,
+                        prune_parts)
 from .physical import ExecContext, ExecMetrics, TableStorage, execute
 from .rewriter import RelationalRewriter, make_ce_transform
 from .rules import optimize_single

@@ -30,6 +30,7 @@ from ..core.cache import CacheManager
 from ..core.memory import DEVICE, MemoryManager
 from ..core.optimizer import OptimizedBatch
 from . import logical as L
+from .partition import Partitioning, partition_table
 from .physical import ExecContext, ExecMetrics, TableStorage, execute
 from .rules import optimize_single
 from .schema import Table
@@ -71,6 +72,24 @@ def _unspill(table: Table) -> Table:
     return Table(table.schema,
                  {n: jnp.asarray(a) for n, a in table.columns.items()},
                  table.nrows)
+
+
+def _apply_partitioning(storage: TableStorage, cols: Dict[str, np.ndarray],
+                        spec: Partitioning):
+    """Re-cluster a TableStorage so each partition is one contiguous
+    row range (see relational.partition); returns the new storage and
+    the reordered typed columns (for statistics)."""
+    perm, reordered, info = partition_table(spec, storage.nrows, cols)
+    csv_bytes = columnar = None
+    if storage.fmt == "csv":
+        csv_bytes = np.ascontiguousarray(
+            storage.csv_bytes[: storage.nrows][perm])
+    else:
+        columnar = reordered
+    return TableStorage(name=storage.name, schema=storage.schema,
+                        nrows=storage.nrows, fmt=storage.fmt,
+                        columnar=columnar, csv_bytes=csv_bytes,
+                        partitions=info), reordered
 
 
 class Session:
@@ -130,7 +149,8 @@ class Session:
         self.catalog: Dict[str, TableStorage] = {}
         self.stats = StatsRegistry()
         self.budget = int(mem.budget_bytes)
-        self.cost_model = RelationalCostModel(self.stats)
+        self.cost_model = RelationalCostModel(
+            self.stats, prune=getattr(ex, "prune", True))
         # execution-path knobs, mirrored as mutable attributes (bench
         # harnesses tweak e.g. disk_latency_per_byte post-construction;
         # self.config stays the frozen construction-time record)
@@ -140,6 +160,7 @@ class Session:
         self.defer_sync = ex.defer_sync
         self.use_scan_cache = ex.use_scan_cache
         self.use_pallas_filter = ex.use_pallas_filter
+        self.prune = getattr(ex, "prune", True)
         # One budget-aware memory hierarchy for everything the session
         # materializes on device (see core.memory): the CE cache spills
         # device -> host -> drop; evicted scan columns just drop (their
@@ -174,22 +195,43 @@ class Session:
 
     # -- catalog management -------------------------------------------------
     def register(self, storage: TableStorage,
-                 columnar_for_stats: Optional[Dict[str, np.ndarray]] = None):
+                 columnar_for_stats: Optional[Dict[str, np.ndarray]] = None,
+                 partitioning: Optional[Partitioning] = None):
+        """Install (or replace) a table in the catalog.
+
+        ``partitioning`` declares horizontal range/hash partitioning
+        (relational.partition): the rows are physically RE-CLUSTERED so
+        each partition is a contiguous range, per-partition min/max/NDV
+        statistics are collected for pruning, scans go through
+        per-partition device cache entries, and covering expressions
+        over the table become partition-grained MCKP candidates.
+
+        Re-registering a name invalidates everything derived from the
+        old data: whole-table AND per-partition scan-pool entries (all
+        scan keys lead with the table name), retained CE content
+        including partition-grained ``(strict, pid)`` entries (the CE
+        pool is cleared outright — CE plans can join across tables),
+        and the old registration's table/partition statistics.
+        """
         # re-registering a name must not serve the old table's device
         # buffers from the scan cache (keys lead with the table name) ...
         self._scan_pool.invalidate(lambda k: k[0] == storage.name)
         # ... and any retained CE content derived from the old data is
-        # stale too (CE plans can join across tables — drop them all)
+        # stale too (CE plans can join across tables — drop them all,
+        # partition-grained entries included)
         if storage.name in self.catalog:
             self._ce_cache.clear()
             self._resident_index.clear()
-        self.catalog[storage.name] = storage
         cols = storage.columnar if storage.columnar is not None \
             else columnar_for_stats
         assert cols is not None, "stats need typed columns (pre-processing)"
+        if partitioning is not None:
+            storage, cols = _apply_partitioning(storage, cols, partitioning)
+        self.catalog[storage.name] = storage
         self.stats.register(
             storage.name,
-            build_table_stats(cols, storage.nrows, storage.schema))
+            build_table_stats(cols, storage.nrows, storage.schema),
+            partitions=storage.partitions)
 
     def table(self, name: str) -> L.Scan:
         st = self.catalog[name]
@@ -228,11 +270,28 @@ class Session:
         ce_dev = ce_pool.stats.used if ce_pool is not None else 0
         other = mm.device_used - ce_dev
         retained = 0
-        if ce_pool is not None and self._resident_index:
-            retained = sum(e.nbytes for e in ce_pool.entries.values()
-                           if e.tier == DEVICE
-                           and e.key in self._resident_index)
+        if ce_pool is not None:
+            # whole-CE residents tracked by the strict index, plus every
+            # partition-grained (strict, pid) entry — both survive into
+            # the next window, so their device bytes are not claimable
+            retained = sum(
+                e.nbytes for e in ce_pool.entries.values()
+                if e.tier == DEVICE
+                and (e.key in self._resident_index
+                     if isinstance(e.key, bytes) else True))
         return max(0, min(budget, mm.device_budget - other - retained))
+
+    def ce_resident_parts(self) -> Dict[bytes, frozenset]:
+        """strict fingerprint -> resident partition ids, for every
+        partition-grained CE entry still materialized (device or host
+        tier) — the per-partition cross-window reuse set the optimizer
+        re-prices as already-paid (rebuilt from live cache keys each
+        window, so dropped entries disappear automatically)."""
+        out: Dict[str, set] = {}
+        for key in self._ce_cache.keys():
+            if isinstance(key, tuple) and len(key) == 2:
+                out.setdefault(key[0], set()).add(key[1])
+        return {k: frozenset(v) for k, v in out.items()}
 
     def run_one(self, plan: L.Node,
                 ctx: Optional[ExecContext] = None) -> QueryResult:

@@ -92,12 +92,23 @@ class Scan(Node):
     table: str = ""
     fmt: str = "columnar"          # "columnar" (Parquet analog) | "csv"
     _schema: Schema = None         # type: ignore[assignment]
+    # Partition restriction (relational.partition): None scans the whole
+    # table; a tuple of partition ids scans only those contiguous row
+    # ranges (set by partition pruning and by per-partition CE
+    # materialization).  Loose fingerprints ignore it (label only);
+    # strict content fingerprints include it so a restricted scan never
+    # aliases the full relation.
+    parts: Optional[Tuple[int, ...]] = None
 
     loose = True
 
     @property
     def label(self) -> str:
         return f"scan:{self.table}:{self.fmt}"
+
+    @property
+    def content_attrs(self) -> object:
+        return self.parts
 
     @property
     def schema(self) -> Schema:

@@ -42,7 +42,9 @@ from ..core.memory import MemoryPool
 from . import expr as E
 from . import logical as L
 from .fuse import FusedPipeline, fuse_plan
-from .schema import Schema, Table, next_pow2
+from .partition import (PartitionInfo, PartitionedCePlan, prune_parts,
+                        restrict_to_parts)
+from .schema import Schema, Table, empty_like, next_pow2
 
 I32_SENTINEL = np.int32(2**31 - 1)
 
@@ -63,6 +65,11 @@ class TableStorage:
     fmt: str                      # "csv" | "columnar"
     columnar: Optional[Dict[str, np.ndarray]] = None
     csv_bytes: Optional[np.ndarray] = None        # (nrows, row_csv_bytes) u8
+    # horizontal partition layout (relational.partition): when set, rows
+    # are re-clustered so each partition is a contiguous range, scans go
+    # through per-partition device cache entries, and filter predicates
+    # prune partitions before scanning
+    partitions: Optional[PartitionInfo] = None
 
     @property
     def disk_bytes(self) -> int:
@@ -117,6 +124,42 @@ class ExecContext:
     # recompact runs only on estimate overflow
     cost_model: Optional[object] = None
     defer_sync: bool = True
+    # partition pruning: fused pipelines over partitioned tables skip
+    # partitions whose statistics refute the predicate (conservative —
+    # disable to force the unpruned path, e.g. for bit-identity tests)
+    prune: bool = True
+    # strict cache key -> PartitionedCePlan for every partition-grained
+    # CE this window selected: reads compose resident partitions from
+    # the cache with per-partition recomputation of the cold ones
+    partitioned_ces: Dict[bytes, PartitionedCePlan] = \
+        field(default_factory=dict)
+    # window-scoped memo of recomputed NON-admitted partitions: like a
+    # whole-CE materialization, a cold partition is computed once per
+    # window and shared by every consumer — but unlike admitted
+    # entries it dies with the window's context instead of occupying
+    # the budgeted cache.  Pinning is bounded by ONE device budget
+    # (see _memo_put) — the same order as any operator's transient
+    # output; beyond that the memo degrades to recompute-per-read
+    # instead of holding unbounded device bytes the MCKP rejected.
+    ce_part_memo: Dict[tuple, "Table"] = field(default_factory=dict)
+    ce_part_memo_bytes: int = 0
+
+    def _memo_put(self, key: tuple, table: "Table") -> bool:
+        allowance = float("inf")
+        manager = getattr(self.cache, "manager", None) \
+            if self.cache is not None else None
+        if manager is not None:
+            allowance = manager.device_budget
+        if self.ce_part_memo_bytes + table.nbytes <= allowance:
+            self.ce_part_memo[key] = table
+            self.ce_part_memo_bytes += table.nbytes
+            return True
+        return False
+
+    def _memo_drop(self, key: tuple) -> None:
+        t = self.ce_part_memo.pop(key, None)
+        if t is not None:
+            self.ce_part_memo_bytes -= t.nbytes
 
     def estimate(self, kind: str, *args) -> Optional[int]:
         """Cardinality estimate for deferred sync; None -> eager sync."""
@@ -145,6 +188,7 @@ class ExecContext:
             use_pallas_filter=getattr(cfg, "use_pallas_filter", False),
             fuse=cfg.fuse,
             defer_sync=cfg.defer_sync,
+            prune=getattr(cfg, "prune", True),
             cost_model=cost_model,
             scan_cache=scan_cache)
 
@@ -292,41 +336,189 @@ def _pad_rows(arr: np.ndarray, cap: int) -> np.ndarray:
     return np.concatenate([arr, np.zeros(pad_shape, arr.dtype)], 0)
 
 
-def _scan_cached(ctx: ExecContext, key: tuple, host_arr: np.ndarray,
-                 cap: int) -> jnp.ndarray:
+def _scan_pool_put(ctx: ExecContext, key: tuple, dev: jnp.ndarray,
+                   benefit: float) -> None:
+    """Single admission point for the scan pool (whole-table,
+    per-partition, and assembled entries all rank under one benefit
+    unit system); raw-dict caches (tests) just store."""
+    sc = ctx.scan_cache
+    if isinstance(sc, MemoryPool):
+        nbytes = int(dev.size) * dev.dtype.itemsize
+        sc.put(key, dev, nbytes=nbytes, benefit=benefit)
+    elif sc is not None:
+        sc[key] = dev
+
+
+def _reread_benefit(ctx: ExecContext, host_nbytes: int) -> float:
+    """Benefit of a scan entry: the re-read cost it saves per hit, in
+    the SAME units as the CostModel's Eq. 3 values that CE entries
+    carry (per-byte columnar io + modeled disk latency), so
+    benefit-per-byte eviction ranks the two pools consistently."""
+    io = getattr(getattr(ctx.cost_model, "c", None), "io_col", 1e-9)
+    return host_nbytes * (io + ctx.disk_latency_per_byte)
+
+
+def _scan_cached(ctx: ExecContext, key: tuple, host, cap: int,
+                 host_nbytes: Optional[int] = None) -> jnp.ndarray:
     """Padded device column, memoized per (table, col, cap, sharding).
 
     Repeated scans across a batch (and across batches of the same
     Session) skip both the host-side pad copy and the host→device
     transfer — the dominant per-scan cost once plans are compiled.
+    ``host`` may be a zero-arg callable building the host array lazily
+    (with ``host_nbytes`` supplied for metrics): an expensive host-side
+    assembly then only runs on a cache miss.
     """
     sc = ctx.scan_cache
+    lazy = callable(host)
+    nbytes = host_nbytes if lazy else host.nbytes
     if sc is not None:
         key = key + (cap, str(ctx.sharding))
         hit = sc.get(key)
         if hit is not None:
-            ctx.metrics.bytes_scan_cache_read += host_arr.nbytes
+            ctx.metrics.bytes_scan_cache_read += nbytes
             return hit
+    host_arr = host() if lazy else host
     dev = _device_put(_pad_rows(host_arr, cap), ctx)
     ctx.metrics.bytes_read_disk += host_arr.nbytes
-    if isinstance(sc, MemoryPool):
-        # budgeted admission: the entry's benefit is the re-read cost
-        # it saves per hit, in the SAME units as the CostModel's Eq. 3
-        # values that CE entries carry (per-byte columnar io + modeled
-        # disk latency), so benefit-per-byte eviction ranks the two
-        # pools consistently
-        nbytes = int(dev.size) * dev.dtype.itemsize
-        io = getattr(getattr(ctx.cost_model, "c", None), "io_col", 1e-9)
-        sc.put(key, dev, nbytes=nbytes,
-               benefit=host_arr.nbytes * (io + ctx.disk_latency_per_byte))
-    elif sc is not None:
-        sc[key] = dev
+    _scan_pool_put(ctx, key, dev, _reread_benefit(ctx, host_arr.nbytes))
     return dev
+
+
+def _scan_part_cached(ctx: ExecContext, key: tuple,
+                      host_slice: np.ndarray) -> jnp.ndarray:
+    """UNPADDED device copy of one partition's rows, memoized per
+    (table, column/"__csv__", "part", pid).  Partition-grained entries
+    are what different prune sets share: a scan pruned to {1, 3} and a
+    later one pruned to {3, 5} both reuse partition 3's bytes."""
+    sc = ctx.scan_cache
+    if sc is not None:
+        hit = sc.get(key)
+        if hit is not None:
+            ctx.metrics.bytes_scan_cache_read += host_slice.nbytes
+            return hit
+    dev = _device_put(host_slice, ctx)
+    ctx.metrics.bytes_read_disk += host_slice.nbytes
+    _scan_pool_put(ctx, key, dev, _reread_benefit(ctx, host_slice.nbytes))
+    return dev
+
+
+def _assemble(pieces: list, cap: int, like: jnp.ndarray) -> jnp.ndarray:
+    """Concatenate partition arrays and zero-pad the row dim to cap."""
+    total = sum(int(p.shape[0]) for p in pieces)
+    pad = cap - total
+    if pad:
+        pieces = pieces + [jnp.zeros((pad,) + like.shape[1:], like.dtype)]
+    return pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces, 0)
+
+
+def _parts_assembled(ctx: ExecContext, st: "TableStorage", colname: str,
+                     host_arr: np.ndarray, parts, ranges,
+                     cap: int) -> jnp.ndarray:
+    """Padded device column assembled from per-partition cache entries,
+    with the ASSEMBLY itself memoized per (table, col, parts, cap) —
+    repeat scans with the same prune set skip the device concat (the
+    PR 1 warm-scan fast path), while the per-partition entries remain
+    the shareable source tier for other prune sets.  Assembled entries
+    carry a low benefit (rebuilding one is just a concat over resident
+    pieces), so benefit-ranked eviction drops them before the pieces."""
+    sc = ctx.scan_cache
+    akey = (st.name, colname, "asm", tuple(parts), cap)
+    if sc is not None:
+        hit = sc.get(akey)
+        if hit is not None:
+            row_bytes = host_arr.nbytes // max(host_arr.shape[0], 1)
+            live = sum(hi - lo for lo, hi in ranges)
+            ctx.metrics.bytes_scan_cache_read += row_bytes * live
+            return hit
+    pieces = [_scan_part_cached(ctx, (st.name, colname, "part", p),
+                                host_arr[lo:hi])
+              for p, (lo, hi) in zip(parts, ranges) if hi > lo]
+    arr = _assemble(pieces, cap, pieces[0] if pieces
+                    else jnp.asarray(host_arr[:1]))
+    if pieces and arr is pieces[0]:
+        return arr      # identity assembly: already cached per-part
+    # low benefit: rebuilding is one device concat over resident pieces
+    nbytes = int(arr.size) * arr.dtype.itemsize
+    _scan_pool_put(ctx, akey, arr, benefit=nbytes * 3e-10)
+    return arr
+
+
+def _exec_scan_partitioned(node: L.Scan, st: TableStorage,
+                           info: PartitionInfo, ctx: ExecContext,
+                           needed: Tuple[str, ...]) -> Table:
+    """Scan a partitioned table: only the selected contiguous partition
+    ranges are read, through per-partition device cache entries
+    (ascending partition id, so the result is the unpruned relation
+    with non-selected partitions' rows deleted, order preserved).
+
+    With a multi-device ``ctx.sharding`` the selected ranges are
+    assembled host-side and placed with the NamedSharding (rows — and
+    hence partitions — spread across the mesh's devices); the assembled
+    array is memoized per partition SET, trading cross-prune-set reuse
+    for single-placement scans (ROADMAP: sharded-scan caveats).
+    """
+    parts = node.parts if node.parts is not None else info.all_parts()
+    nrows = info.rows_of(parts)
+    cap = next_pow2(max(nrows, 1))
+    schema = st.schema.select(needed)
+    if nrows == 0:       # every partition pruned (or restricted) away
+        return Table(schema, empty_like(schema, cap), 0)
+    ranges = [info.part_range(p) for p in parts]
+    cols: Dict[str, jnp.ndarray] = {}
+
+    def host_assembly(arr: np.ndarray):
+        """Lazy host-side concat of the selected ranges (runs only on
+        a scan-cache miss — warm sharded scans skip the memcpy) plus
+        the live byte count for hit metrics."""
+        if len(parts) == info.n_partitions:
+            return (lambda: arr), arr.nbytes
+        row_bytes = arr.nbytes // max(arr.shape[0], 1)
+        live = sum(hi - lo for lo, hi in ranges)
+        build = lambda: np.concatenate(
+            [arr[lo:hi] for lo, hi in ranges if hi > lo], 0)
+        return build, row_bytes * live
+
+    sharded = ctx.sharding is not None
+    if st.fmt == "csv":
+        if sharded:
+            build, live_bytes = host_assembly(st.csv_bytes)
+            raw = _scan_cached(ctx, (st.name, "__csv__", parts),
+                               build, cap, host_nbytes=live_bytes)
+        else:
+            raw = _parts_assembled(ctx, st, "__csv__", st.csv_bytes,
+                                   parts, ranges, cap)
+        offsets = st.schema.csv_offsets()
+        for name in needed:
+            off, w = offsets[name]
+            fieldb = jax.lax.slice_in_dim(raw, off, off + w, axis=1)
+            t = st.schema.coltype(name)
+            ctx.metrics.bytes_parsed += nrows * w
+            if t.kind == "i32":
+                cols[name] = _parse_i32(fieldb)
+            elif t.kind == "f32":
+                cols[name] = _parse_f32(fieldb)
+            else:
+                cols[name] = fieldb
+    else:
+        for name in needed:
+            src = st.columnar[name]
+            if sharded:
+                build, live_bytes = host_assembly(src)
+                cols[name] = _scan_cached(ctx, (st.name, name, parts),
+                                          build, cap,
+                                          host_nbytes=live_bytes)
+            else:
+                cols[name] = _parts_assembled(ctx, st, name, src,
+                                              parts, ranges, cap)
+    return Table(schema, cols, nrows)
 
 
 def _exec_scan(node: L.Scan, ctx: ExecContext,
                needed: Tuple[str, ...]) -> Table:
     st = ctx.catalog[node.table]
+    if st.partitions is not None and st.partitions.n_partitions > 1:
+        return _exec_scan_partitioned(node, st, st.partitions, ctx, needed)
     cap = next_pow2(st.nrows)
     cols: Dict[str, jnp.ndarray] = {}
     if st.fmt == "csv":
@@ -685,6 +877,67 @@ def _try_pallas_filter(pred: E.Expr, child: Table):
 
 
 # ---------------------------------------------------------------------------
+# multi-device sharded scans: per-shard predicate evaluation
+# ---------------------------------------------------------------------------
+def _sharded_mask_fn(key, pred: E.Expr, names: Tuple[str, ...],
+                     ndims: Tuple[int, ...], mesh, axis: str):
+    """Predicate mask per shard under shard_map: each device evaluates
+    its local rows (embarrassingly parallel — the fused filter's row
+    scan runs on every device at once), the count is one psum, and the
+    mask comes back row-sharded for the global compaction that follows
+    (compaction is data-dependent-shape and stays in XLA/GSPMD)."""
+    from jax.sharding import PartitionSpec as P
+
+    try:
+        from jax import shard_map
+    except ImportError:  # pragma: no cover - older jax
+        from jax.experimental.shard_map import shard_map
+
+    def local(nrows, *cols):
+        n_local = cols[0].shape[0]
+        base = jax.lax.axis_index(axis) * n_local
+        columns = dict(zip(names, cols))
+        live = (base + jnp.arange(n_local)) < nrows
+        mask = E.eval_expr(pred, columns) & live
+        count = jax.lax.psum(jnp.sum(mask.astype(jnp.int32)), axis)
+        return mask, count
+
+    in_specs = (P(),) + tuple(
+        P(axis) if nd == 1 else P(axis, None) for nd in ndims)
+    try:
+        fn = shard_map(local, mesh=mesh, in_specs=in_specs,
+                       out_specs=(P(axis), P()), check_vma=False)
+    except TypeError:  # pragma: no cover - pre-check_vma jax
+        fn = shard_map(local, mesh=mesh, in_specs=in_specs,
+                       out_specs=(P(axis), P()), check_rep=False)
+    return jax.jit(fn)
+
+
+def _try_shard_map_mask(pred: E.Expr, child: Table, ctx: ExecContext):
+    """(mask, count) via per-shard evaluation, or (None, None) when the
+    context is not multi-device row-sharded (single-axis NamedSharding
+    with the row capacity divisible by the axis size)."""
+    sh = ctx.sharding
+    if not isinstance(sh, jax.sharding.NamedSharding):
+        return None, None
+    spec = tuple(sh.spec)
+    if not spec or not isinstance(spec[0], str):
+        return None, None
+    axis = spec[0]
+    mesh = sh.mesh
+    n_sh = dict(zip(mesh.axis_names, mesh.devices.shape)).get(axis, 1)
+    if n_sh <= 1 or child.capacity % n_sh:
+        return None, None
+    names = child.schema.names
+    ndims = tuple(child.columns[n].ndim for n in names)
+    key = ("smask", E.canonical(pred), names, child.capacity,
+           axis, n_sh, str(sh))
+    fn = _cached(key, lambda: _sharded_mask_fn(key, pred, names, ndims,
+                                               mesh, axis))
+    return fn(jnp.int32(child.nrows), *[child.columns[n] for n in names])
+
+
+# ---------------------------------------------------------------------------
 # fused pipelines (relational.fuse): leaf → Filter* → Project in ONE call
 # ---------------------------------------------------------------------------
 def _fused_fn(key, pred: E.Expr, in_names: Tuple[str, ...],
@@ -704,7 +957,26 @@ def _fused_fn(key, pred: E.Expr, in_names: Tuple[str, ...],
 def _exec_fused(node: FusedPipeline, ctx: ExecContext) -> Table:
     src, pred = node.source, node.pred
     need = set(node.cols) | E.columns_of(pred)
+    est_rows = None
     if isinstance(src, L.Scan):
+        st = ctx.catalog[src.table]
+        if (ctx.prune and src.parts is None and st.partitions is not None
+                and st.partitions.n_partitions > 1
+                and not isinstance(pred, E.TrueExpr)):
+            # partition pruning: statistics refute the predicate on the
+            # skipped partitions, so the scan reads only the surviving
+            # contiguous ranges.  The deferred-sync capacity estimate is
+            # taken over the FULL table (the qualifying rows all live in
+            # surviving partitions — estimating over the pruned input
+            # would undershoot by exactly the pruned fraction and force
+            # the overflow recompact on the hot path), then capped at
+            # the pruned input size.
+            live = prune_parts(pred, st.partitions)
+            if len(live) < st.partitions.n_partitions:
+                from dataclasses import replace as _dc_replace
+
+                src = _dc_replace(src, parts=live)
+                est_rows = st.nrows
         needed = tuple(n for n in src.schema.names if n in need)
         child = _exec_scan(src, ctx, needed)
     else:
@@ -717,7 +989,21 @@ def _exec_fused(node: FusedPipeline, ctx: ExecContext) -> Table:
 
     in_names = child.schema.names
     in_cols = [child.columns[n] for n in in_names]
-    est = ctx.estimate("filter", pred, child.nrows)
+    est = ctx.estimate("filter", pred,
+                       est_rows if est_rows is not None else child.nrows)
+    if est is not None and est_rows is not None:
+        est = min(est, child.nrows)
+    if (est is not None and isinstance(src, L.Scan)
+            and src.parts is not None):
+        # partition-RESTRICTED scan (per-partition CE recompute): the
+        # restriction exists because the covering predicate keeps these
+        # partitions, so whole-table selectivity applied to partition
+        # rows systematically undershoots (range partitioning on the
+        # filter column is the worst case: every row passes) — forcing
+        # the overflow re-dispatch on the warm recompute path.  Size at
+        # the partition input; the overshoot guard recompacts the rare
+        # genuinely-selective case.
+        est = child.nrows
     if est is not None and isinstance(src, L.CachedScan):
         # residual over a covering relation: condition on the covering
         # plan's selectivity (the CE output already passed the OR of
@@ -733,6 +1019,10 @@ def _exec_fused(node: FusedPipeline, ctx: ExecContext) -> Table:
         # kernel computes mask+count; only the data-dependent-shape
         # compaction stays in XLA (see kernels.filter_project.kernel)
         mask, count = _try_pallas_filter(pred, child)
+    if mask is None:
+        # multi-device row sharding: predicate evaluation per shard
+        # under shard_map (no communication except the count psum)
+        mask, count = _try_shard_map_mask(pred, child, ctx)
 
     def project_compact(new_cap: int):
         return _compact_nz(mask, new_cap,
@@ -830,11 +1120,82 @@ def _exec(node: L.Node, ctx: ExecContext, req) -> Table:
     return out
 
 
+def _concat_tables(schema: Schema, tables: list) -> Table:
+    """Stack partition outputs (ascending partition id) into one
+    relation: live rows of each piece, concatenated, padded to pow2."""
+    total = sum(t.nrows for t in tables)
+    cap = next_pow2(max(total, 1))
+    if total == 0:
+        return Table(schema, empty_like(schema, cap), 0)
+    cols: Dict[str, jnp.ndarray] = {}
+    for name in schema.names:
+        pieces = [t.columns[name][: t.nrows] for t in tables if t.nrows]
+        cols[name] = _assemble(pieces, cap, pieces[0])
+    return Table(schema, cols, total)
+
+
+def _partitioned_ce_table(psi: bytes, ctx: ExecContext) -> Table:
+    """A partition-grained CE's full output: resident partitions come
+    from the cache, cold partitions re-run the covering plan restricted
+    to that partition (admitted ones are materialized as they compute).
+    Composition order is ascending partition id — the same order an
+    unpartitioned materialization would produce."""
+    composed = ctx.ce_part_memo.get((psi, "composed"))
+    if composed is not None:
+        # one composition per window: every consumer reads the same
+        # Table (matching the whole-CE path's materialize-once shape)
+        return composed
+    pp = ctx.partitioned_ces[psi]
+    pieces = []
+    for pid in pp.live:
+        cached = ctx.cache.get((psi, pid)) if ctx.cache is not None \
+            else None
+        if cached is not None:
+            ctx.metrics.bytes_cached_read += cached.nbytes
+            pieces.append(cached)
+            continue
+        memo = ctx.ce_part_memo.get((psi, pid))
+        if memo is not None:
+            pieces.append(memo)
+            continue
+        plan = restrict_to_parts(pp.plan, (pid,))
+        if ctx.fuse:
+            plan = fuse_plan(plan)
+        t = _exec(plan, ctx, required_columns_of(plan))
+        if ctx.cache is not None and pid in pp.admitted:
+            ctx.cache.put((psi, pid), t, nbytes=t.nbytes,
+                          est_bytes=t.logical_nbytes,
+                          benefit=pp.benefits.get(pid, 0.0))
+        else:
+            ctx._memo_put((psi, pid), t)
+        pieces.append(t)
+    out = _concat_tables(pp.plan.schema, pieces)
+    # prefer memoizing the composed table (later reads are then free);
+    # it subsumes the per-partition entries, so release those on
+    # success.  Under a tight budget the composed copy may not fit the
+    # memo allowance — keep the (smaller) cold pieces instead and let
+    # later reads re-concat from cache + memo.
+    for pid in pp.live:
+        ctx._memo_drop((psi, pid))
+    if not ctx._memo_put((psi, "composed"), out):
+        for pid, t in zip(pp.live, pieces):
+            if ctx.cache is None or not ctx.cache.contains((psi, pid)):
+                ctx._memo_put((psi, pid), t)
+    return out
+
+
 def _materialize_cache(node: L.Cache, ctx: ExecContext, req) -> Table:
     assert ctx.cache is not None, "cache plan requires a CacheManager"
     existing = ctx.cache.get(node.psi)
     if existing is not None:
+        # a WHOLE resident entry serves even when this window treats
+        # the CE as partition-grained: eligibility for partitioning
+        # depends on the other CEs in the window, so the same content
+        # can be admitted whole in one window and per-partition in the
+        # next — the already-materialized bytes must not be recomputed
         return existing
+    if node.psi in ctx.partitioned_ces:
+        return _partitioned_ce_table(node.psi, ctx)
     table = _exec(node.child, ctx, req)
     ctx.cache.put(node.psi, table, nbytes=table.nbytes,
                   est_bytes=table.logical_nbytes,
@@ -847,17 +1208,20 @@ def _cached_scan_table(node: L.CachedScan, ctx: ExecContext) -> Table:
     first touch: Spark cache() is a transformation — §6.3 footnote 5)."""
     assert ctx.cache is not None
     table = ctx.cache.get(node.psi)
-    if table is None:
-        plan = ctx.cache_plans.get(node.psi)
-        if plan is None:
-            raise KeyError(f"no cache plan registered for ψ="
-                           f"{node.psi.hex()[:12]}")
-        if ctx.fuse:
-            plan = fuse_plan(plan)
-        table = _exec(plan, ctx, required_columns_of(plan))
-    else:
+    if table is not None:
+        # whole resident entry — serves even if this window re-planned
+        # the CE as partition-grained (see _materialize_cache)
         ctx.metrics.bytes_cached_read += table.nbytes
-    return table
+        return table
+    if node.psi in ctx.partitioned_ces:
+        return _partitioned_ce_table(node.psi, ctx)
+    plan = ctx.cache_plans.get(node.psi)
+    if plan is None:
+        raise KeyError(f"no cache plan registered for ψ="
+                       f"{node.psi.hex()[:12]}")
+    if ctx.fuse:
+        plan = fuse_plan(plan)
+    return _exec(plan, ctx, required_columns_of(plan))
 
 
 def _exec_cached_scan(node: L.CachedScan, ctx: ExecContext, req) -> Table:

@@ -74,6 +74,10 @@ class ExecutionConfig:
     defer_sync: bool = True
     use_scan_cache: bool = True
     use_pallas_filter: bool = False
+    # partition pruning over partitioned tables (relational.partition):
+    # fused pipelines skip partitions whose statistics refute the
+    # predicate.  False forces the unpruned path (bit-identity tests).
+    prune: bool = True
     sharding: Optional[Any] = None          # jax.sharding.Sharding
     disk_latency_per_byte: float = 0.0
 
@@ -232,7 +236,7 @@ class QueryService:
         queries were due); if this arrival fills the window to
         ``max_batch``, the window closes inside this call.
         """
-        self._flush_if_due()
+        self.flush_expired()
         handle = QueryHandle(self, plan, self._n_submitted)
         self._n_submitted += 1
         if not self._pending:
@@ -245,7 +249,21 @@ class QueryService:
     def poll(self) -> bool:
         """Deadline check: closes the open window if ``max_wait_s`` has
         elapsed.  Returns True when a window ran."""
-        return self._flush_if_due()
+        return self.flush_expired() is not None
+
+    def flush_expired(self):
+        """Close the open window IFF its deadline has passed — the
+        cooperative window-closing entry point for callers that are not
+        submitting (a server event loop, a background ticker): unlike
+        ``flush()`` it never cuts a still-filling window short, and
+        unlike ``result()`` it does not block on any handle.  Returns
+        the closed window's BatchResult, or None when no window was
+        due (no deadline configured, nothing pending, or still within
+        ``max_wait_s``)."""
+        if (self._pending and self.max_wait_s is not None
+                and self._clock() - self._opened_at >= self.max_wait_s):
+            return self.flush()
+        return None
 
     @property
     def pending(self) -> int:
@@ -274,15 +292,8 @@ class QueryService:
                                 locally_optimize=locally_optimize)
 
     # -- internals -----------------------------------------------------------
-    def _flush_if_due(self) -> bool:
-        if (self._pending and self.max_wait_s is not None
-                and self._clock() - self._opened_at >= self.max_wait_s):
-            self.flush()
-            return True
-        return False
-
     def _force(self, handle: QueryHandle) -> None:
-        self._flush_if_due()
+        self.flush_expired()
         if not handle._done and any(h is handle for h in self._pending):
             self.flush()
 
@@ -332,6 +343,15 @@ class QueryService:
                         if not cache.contains(s)]:
                 del sess._resident_index[sfp]
         capacity = sess.planning_capacity(budget)
+        partitioner = None
+        # prune=False must force the UNPRUNED path end to end: CE
+        # partitioning both prunes live partitions and executes
+        # partition-restricted scans, so the debugging knob disables it
+        if sess.prune and any(st.partitions is not None
+                              for st in sess.catalog.values()):
+            from .partition import make_ce_partitioner
+
+            partitioner = make_ce_partitioner(sess.catalog)
         optimizer = MultiQueryOptimizer(
             cost_model=sess.cost_model,
             rewriter=RelationalRewriter(fuse_residuals=sess.fuse),
@@ -340,27 +360,52 @@ class QueryService:
             ce_transform=make_ce_transform(),
             max_compound_size=sess.config.mqo.max_compound_size,
             chain_cache_plans=sess.config.mqo.chain_cache_plans,
+            partitioner=partitioner,
         )
         # loose psi -> strict fingerprints of every resident covering
         # relation with that structure (a zero planning budget disables
-        # resident reuse — it is the "no caching at all" baseline)
+        # resident reuse — it is the "no caching at all" baseline);
+        # partition-grained residents are keyed (strict, pid) and
+        # re-priced per partition
         resident: Dict[bytes, Set[bytes]] = {}
+        resident_parts: Dict[bytes, frozenset] = {}
         if budget > 0:
             for sfp, psi in sess._resident_index.items():
                 resident.setdefault(psi, set()).add(sfp)
-        optimized = optimizer.optimize(list(plans), resident=resident)
+            resident_parts = sess.ce_resident_parts()
+        optimized = optimizer.optimize(list(plans), resident=resident,
+                                       resident_parts=resident_parts)
 
         ces = optimized.rewritten.ces
         # strict keys cannot collide across content, so no stale-entry
         # eviction is needed; record which selected CEs are already
-        # materialized BEFORE this window executes (handle.explain)
-        pre_resident = frozenset(ce.strict_psi() for ce in ces
-                                 if cache.contains(ce.strict_psi()))
+        # materialized BEFORE this window executes (handle.explain).
+        # A partitioned CE counts as resident when ANY of its
+        # partitions is (that is what partial residency means).
+        pre_resident = frozenset(
+            ce.strict_psi() for ce in ces
+            if (cache.contains(ce.strict_psi())
+                or (ce.partition_detail is not None
+                    and resident_parts.get(ce.strict_psi()))))
         if sess.retain_across_batches:
             for ce in ces:
-                sess._resident_index[ce.strict_psi()] = ce.psi
+                # partitioned CEs are retained per (strict, pid) cache
+                # entry; whole-CE re-pricing would be unsound for them
+                if ce.partition_detail is None:
+                    sess._resident_index[ce.strict_psi()] = ce.psi
         ctx = sess._fresh_ctx(cache)
         ctx.cache_plans = dict(optimized.rewritten.cache_plans)
+        # execution-side records for partition-grained CEs: which
+        # partitions are live, which the MCKP admitted, per-partition
+        # benefit shares for the eviction policy
+        for ce in ces:
+            if ce.partition_detail is None:
+                continue
+            pplan, slices = ce.partition_detail
+            pplan.admitted = ce.admitted_partitions or frozenset()
+            pplan.benefits = {
+                sl.pid: max(float(sl.value), 0.0) for sl in slices}
+            ctx.partitioned_ces[ce.strict_psi()] = pplan
         # benefit-per-byte eviction ranks entries by the cost model's
         # savings estimate (Eq. 3 value at admission time)
         ctx.cache_values = {ce.strict_psi(): max(float(ce.value), 0.0)
@@ -418,7 +463,7 @@ class _LazyExplain:
             if ce is None:
                 continue           # e.g. full-relation keys (not a CE)
             resident_repriced = bool(ce.cost_detail.get("resident", False))
-            ce_reports.append({
+            entry = {
                 "psi": ce.psi.hex()[:12],
                 "strict_psi": key.hex()[:12],
                 "label": ce.tree.label,
@@ -428,7 +473,14 @@ class _LazyExplain:
                 "resident_repriced": resident_repriced,
                 "cache_hit": key in self.pre_resident,
                 "single_resume": resident_repriced and ce.m < self.k,
-            })
+            }
+            if ce.partition_detail is not None:
+                pplan, _ = ce.partition_detail
+                entry["partitions"] = {
+                    "live": list(pplan.live),
+                    "admitted": sorted(ce.admitted_partitions or ()),
+                }
+            ce_reports.append(entry)
         return {
             "status": "done",
             "window": self.window,

@@ -22,6 +22,7 @@ import numpy as np
 from . import expr as E
 from . import logical as L
 from .fuse import FusedPipeline
+from .partition import PartitionInfo, prune_parts
 from .schema import Schema
 
 
@@ -74,18 +75,46 @@ def build_table_stats(columns: Dict[str, np.ndarray], nrows: int,
 
 
 class StatsRegistry:
-    """column name -> ColumnStats across the whole catalog."""
+    """column name -> ColumnStats across the whole catalog (plus, for
+    partitioned tables, the per-partition layout/statistics that drive
+    pruning-aware cardinality and cost estimates)."""
 
     def __init__(self):
         self.tables: Dict[str, TableStats] = {}
         self.columns: Dict[str, ColumnStats] = {}
+        self.partitions: Dict[str, PartitionInfo] = {}
 
-    def register(self, table: str, stats: TableStats):
+    def register(self, table: str, stats: TableStats,
+                 partitions: Optional[PartitionInfo] = None):
         self.tables[table] = stats
         self.columns.update(stats.columns)
+        # re-registration must REPLACE partition metadata, including
+        # dropping it when the new registration is unpartitioned —
+        # stale per-partition statistics would mis-prune the new data
+        if partitions is not None:
+            self.partitions[table] = partitions
+        else:
+            self.partitions.pop(table, None)
 
     def col(self, name: str) -> Optional[ColumnStats]:
         return self.columns.get(name)
+
+    def scan_rows(self, node: L.Scan) -> int:
+        """Rows a (possibly partition-restricted) Scan produces."""
+        ts = self.tables.get(node.table)
+        total = int(ts.nrows) if ts else 1000
+        info = self.partitions.get(node.table)
+        if node.parts is not None and info is not None:
+            return int(info.rows_of(node.parts))
+        return total
+
+    def pruned_rows(self, table: str, pred: E.Expr) -> Optional[int]:
+        """Rows surviving partition pruning of ``pred`` over ``table``
+        (None when the table is unpartitioned)."""
+        info = self.partitions.get(table)
+        if info is None:
+            return None
+        return int(info.rows_of(prune_parts(pred, info)))
 
 
 # ---------------------------------------------------------------------------
@@ -217,12 +246,19 @@ class CostConstants:
 
 
 class RelationalCostModel:
-    """CostModel over relational plans using the stats registry."""
+    """CostModel over relational plans using the stats registry.
+
+    ``prune`` mirrors ``ExecutionConfig.prune``: pruning-aware scan
+    pricing must only apply when the executor actually prunes —
+    otherwise the no-pruning baseline would be priced for an execution
+    path it never takes."""
 
     def __init__(self, reg: StatsRegistry,
-                 consts: CostConstants | None = None):
+                 consts: CostConstants | None = None,
+                 prune: bool = True):
         self.reg = reg
         self.c = consts or CostConstants()
+        self.prune = prune
 
     # ---- cardinalities ----------------------------------------------------
     def output_rows(self, node: L.Node) -> int:
@@ -230,8 +266,7 @@ class RelationalCostModel:
 
     def _rows(self, node: L.Node) -> float:
         if isinstance(node, L.Scan):
-            ts = self.reg.tables.get(node.table)
-            return float(ts.nrows if ts else 1000)
+            return float(self.reg.scan_rows(node))
         if isinstance(node, L.CachedScan):
             return 1000.0  # post-rewrite leaf; not priced
         if isinstance(node, FusedPipeline):
@@ -274,8 +309,7 @@ class RelationalCostModel:
         c = self.c
         rows = self._rows(node)
         if isinstance(node, L.Scan):
-            ts = self.reg.tables.get(node.table)
-            n = float(ts.nrows if ts else 1000)
+            n = float(self.reg.scan_rows(node))
             needed = req.get(id(node), frozenset(node.schema.names))
             if node.fmt == "csv":
                 # CSV must read whole rows, then parse the needed fields.
@@ -290,10 +324,25 @@ class RelationalCostModel:
             return 0.0
         if isinstance(node, FusedPipeline):
             # one pass over the source: every residual term is priced at
-            # the fused rate, plus the gather of the projected output
+            # the fused rate, plus the gather of the projected output.
+            # Partition pruning shrinks both the scan and the per-row
+            # predicate work to the surviving partitions' rows (the
+            # executor scans only those ranges), which is what gives
+            # selective fused pipelines over partitioned tables their
+            # tighter C_E — the OUTPUT estimate (`rows`) is unchanged,
+            # since pruning only removes rows the predicate rejects.
             terms = max(_n_terms(node.pred), 1)
-            return (self._cost(node.source, req)
-                    + self._rows(node.source) * terms * c.fused_cmp
+            src_cost = self._cost(node.source, req)
+            src_rows = self._rows(node.source)
+            if (self.prune and isinstance(node.source, L.Scan)
+                    and node.source.parts is None):
+                pruned = self.reg.pruned_rows(node.source.table, node.pred)
+                if pruned is not None and src_rows > 0:
+                    frac = min(1.0, pruned / src_rows)
+                    src_cost *= frac
+                    src_rows = float(pruned)
+            return (src_cost
+                    + src_rows * terms * c.fused_cmp
                     + rows * node.schema.row_mem_bytes * c.cpu_copy)
         if isinstance(node, L.Filter):
             terms = _n_terms(node.pred)

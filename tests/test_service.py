@@ -103,6 +103,46 @@ class TestWindowClosing:
         table = h.result()                        # must not deadlock
         assert h.done and table.nrows > 0
 
+    def test_flush_expired_closes_due_window(self):
+        """ISSUE 4 satellite: a deadline-expired window closes through
+        ``flush_expired()`` alone — no submit/result call required (the
+        ROADMAP's cooperative window-closing open item)."""
+        sess = _mk_session()
+        clock = FakeClock()
+        svc = QueryService(sess, max_batch=100, max_wait_s=5.0,
+                           clock=clock)
+        h = svc.submit(_shared_query(sess))
+        assert svc.flush_expired() is None        # not due yet
+        assert not h.done and svc.pending == 1
+        clock.advance(5.1)
+        batch = svc.flush_expired()               # due: closes, returns
+        assert batch is not None and len(batch.results) == 1
+        assert h.done and svc.pending == 0
+        assert svc.flush_expired() is None        # nothing pending
+
+    def test_flush_expired_never_cuts_filling_window_short(self):
+        sess = _mk_session()
+        clock = FakeClock()
+        svc = QueryService(sess, max_batch=100, max_wait_s=5.0,
+                           clock=clock)
+        handles = [svc.submit(_shared_query(sess)) for _ in range(3)]
+        clock.advance(4.9)
+        assert svc.flush_expired() is None        # within the deadline
+        assert svc.pending == 3
+        clock.advance(0.2)
+        batch = svc.flush_expired()
+        assert len(batch.results) == 3
+        assert all(h.done for h in handles)
+
+    def test_flush_expired_without_deadline_is_noop(self):
+        sess = _mk_session()
+        svc = QueryService(sess, max_batch=100)   # no max_wait_s
+        h = svc.submit(_shared_query(sess))
+        assert svc.flush_expired() is None        # no deadline configured
+        assert not h.done and svc.pending == 1
+        svc.flush()
+        assert h.done
+
     def test_handles_resolve_in_submission_order(self):
         sess = _mk_session()
         svc = QueryService(sess, max_batch=100)
