@@ -1,0 +1,19 @@
+"""Mixed-syntax recurring stream (ISSUE 5 acceptance): the canonical
+plan IR recovers cross-window CE sharing when every dashboard pass
+spells the same queries differently.  The implementation lives in
+``bench_service`` (it reuses that harness's sessions and knobs); this
+module is the runner registration that emits BENCH_pr5.json.
+
+Acceptance: mixed_warm_speedup >= 1.3 and canonical_hit_rate > 0.
+"""
+from typing import List
+
+from bench_service import main_mixed, run_mixed  # noqa: F401
+
+
+def main() -> List[str]:
+    return main_mixed()
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -15,7 +15,7 @@ from typing import Dict, List
 import numpy as np
 
 from common import csv_line, fused_vs_eager, save_result
-from repro.relational import Session, expr as E, make_storage
+from repro.relational import Session, SessionConfig, expr as E, make_storage
 from repro.relational.datagen import generate_columns, people_schema
 
 
@@ -25,8 +25,9 @@ def _mk_session(nrows: int, fmt: str, budget: int,
     cols = generate_columns(schema, nrows, seed=0)
     # fused=False reproduces the seed eager executor (per-operator
     # dispatch, host sync after every filter, no device scan cache)
-    sess = Session(budget_bytes=budget, fuse=fused, defer_sync=fused,
-                   use_scan_cache=fused)
+    sess = Session.from_config(SessionConfig.from_legacy_kwargs(
+        budget_bytes=budget, fuse=fused, defer_sync=fused,
+        use_scan_cache=fused))
     st, _ = make_storage("people", schema, nrows, fmt, cols=cols)
     sess.register(st, columnar_for_stats=cols)
     return sess

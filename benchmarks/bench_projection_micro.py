@@ -11,7 +11,7 @@ from __future__ import annotations
 from typing import Dict, List
 
 from common import csv_line, fused_vs_eager, save_result
-from repro.relational import Session, expr as E, make_storage
+from repro.relational import Session, SessionConfig, expr as E, make_storage
 from repro.relational.datagen import generate_columns, people_schema
 
 
@@ -19,8 +19,9 @@ def _mk_session(nrows: int, fmt: str, budget: int,
                 fused: bool = True) -> Session:
     schema = people_schema()
     cols = generate_columns(schema, nrows, seed=1)
-    sess = Session(budget_bytes=budget, fuse=fused, defer_sync=fused,
-                   use_scan_cache=fused)
+    sess = Session.from_config(SessionConfig.from_legacy_kwargs(
+        budget_bytes=budget, fuse=fused, defer_sync=fused,
+        use_scan_cache=fused))
     st, _ = make_storage("people", schema, nrows, fmt, cols=cols)
     sess.register(st, columnar_for_stats=cols)
     return sess

@@ -14,6 +14,11 @@ Prints ``name,us_per_call,derived`` CSV lines.
   bench_service           beyond-paper    (online QueryService windows:
                           interleaved arrivals + warm residents vs the
                           cold one-shot batch — PR 3)
+  bench_canonical         beyond-paper    (mixed-syntax recurring
+                          stream: the canonical plan IR folds every
+                          author spelling onto one fingerprint, so
+                          warm windows keep hitting resident CEs —
+                          PR 5)
   bench_partition         beyond-paper    (partition-grained MCKP on
                           the selective dashboard: partial admission
                           under a sub-CE budget, warm partial
@@ -44,6 +49,7 @@ MODULES = [
     "bench_macro_tpcds",
     "bench_batch_reuse",
     "bench_service",
+    "bench_canonical",
     "bench_partition",
     "bench_serving_prefix",
     "roofline_report",

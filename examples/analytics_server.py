@@ -1,13 +1,19 @@
 """Analytics-server scenario: the TPC-DS-analog workload served ONLINE
 through the QueryService (paper §5's accumulate-optimize-execute server,
-PR 3's continuous-submission front-end).
+PR 3's continuous-submission front-end), with queries composed in the
+fluent :class:`Relation` frontend (PR 5).
 
-Clients submit queries one at a time; the service accumulates them into
-micro-batch windows (closed by count here), runs the multi-query
+Clients submit lazy Relations one at a time; the service accumulates
+them into micro-batch windows (closed by count here), compiles every
+submission through the canonical plan IR — so differently-spelled
+equivalent queries share one fingerprint — runs the multi-query
 optimizer per window with resident-CE re-pricing, and resolves lazy
 handles.  A recurring dashboard pass is compared against (a) the same
 queries with MQO off and (b) the cold first pass — showing both
-within-window sharing and cross-window resident reuse.
+within-window sharing and cross-window resident reuse.  A final
+section demonstrates the canonicalization contract: a builder-made
+query and a differently-spelled hand-built ``logical.Node`` tree of
+the same semantics land on the SAME covering expression.
 
     PYTHONPATH=src python examples/analytics_server.py \
         [--window 12] [--max-batch 4] [--passes 3]
@@ -16,6 +22,7 @@ import argparse
 import os
 import sys
 import time
+import warnings
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
@@ -35,7 +42,7 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    from repro.relational import QueryService
+    from repro.relational import QueryService, c, expr as E
     from repro.relational.tpcds import build_tpcds_session, tpcds_queries
 
     sess = build_tpcds_session(scale_rows=args.scale_rows,
@@ -81,6 +88,33 @@ def main():
     print(f"aggregate ratio (warm windowed / no-MQO): "
           f"{warm / base.total_seconds:.2f}")
     print(f"warm speedup over cold: {cold / max(warm, 1e-9):.2f}x")
+
+    # -- canonicalization recovers sharing across query spellings -------
+    # the same semantics three ways: fluent builder, fluent builder
+    # with flipped/negated/shuffled predicates, and a hand-assembled
+    # legacy logical.Node tree (accepted as a deprecated shim)
+    ss = sess.table("store_sales")
+    q_builder = (ss.where((c.ss_sales_price > 50.0)
+                          & (c.ss_quantity >= 10))
+                 .select("ss_item_sk", "ss_sales_price"))
+    q_variant = (ss.where(~(c.ss_quantity < 10)
+                          & (50.0 < c.ss_sales_price))
+                 .select("ss_item_sk", "ss_sales_price"))
+    raw_scan = sess.scan_node("store_sales")
+    q_legacy = (raw_scan
+                .filter(E.and_(E.cmp("ss_quantity", ">=", 10),
+                               E.cmp("ss_sales_price", ">", 50.0)))
+                .project("ss_item_sk", "ss_sales_price"))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        h1, h2, h3 = (svc.submit(q_builder), svc.submit(q_variant),
+                      svc.submit(q_legacy))
+        svc.flush()
+    keys = [{ce["strict_psi"] for ce in h.explain()["ces"]}
+            for h in (h1, h2, h3)]
+    print(f"\nmixed-spelling window: builder/variant/legacy CE keys "
+          f"equal = {keys[0] == keys[1] == keys[2]} "
+          f"(shared CE provenance: {sorted(keys[0])})")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,11 @@
-"""Quickstart: the paper's running example (§3) end to end.
+"""Quickstart: the paper's running example (§3) end to end, written
+against the fluent lazy :class:`Relation` frontend (PR 5).
 
-Three HR queries share scans, filters and a join; the multi-query
+Three HR queries share scans, filters and a join; queries are composed
+with the operator-overloaded column namespace ``c`` (``c.salary >
+20000``, combined with ``&``/``|``/``~``), compiled through the
+canonical plan IR — so any syntactic spelling of the same query maps
+to one fingerprint — and optimized as a batch: the multi-query
 optimizer finds the similar subexpressions, builds covering sharing
 plans, selects them under a memory budget via the multiple-choice
 knapsack, rewrites the batch, and the engine executes it with the
@@ -17,7 +22,7 @@ import numpy as np
 
 from repro.relational import (I32, STR, MemoryConfig, Partitioning,
                               QueryService, Schema, Session, SessionConfig,
-                              expr as E, logical as L, make_storage)
+                              c, make_storage)
 
 
 def build_catalog(sess: Session, seed: int = 7):
@@ -80,28 +85,33 @@ def main():
     emp, dept, sal = (sess.table("employees"), sess.table("departments"),
                       sess.table("salaries"))
 
-    q1 = (emp.filter(E.cmp("gender", "==", "F"))
-          .join(dept.filter(E.cmp("location", "==", "us")),
-                "dep", "dept_id")
-          .join(sal.filter(E.cmp("salary", ">", 20000)),
-                "emp_id", "sal_emp_id")
-          .project("name", "dept_name", "salary")
+    # lazy, immutable Relations: nothing executes until a sink is hit
+    q1 = (emp.where(c.gender == "F")
+          .join(dept.where(c.location == "us"), "dep", "dept_id")
+          .join(sal.where(c.salary > 20000), "emp_id", "sal_emp_id")
+          .select("name", "dept_name", "salary")
           .sort("salary", desc=True))
-    q2 = (emp.filter(E.cmp("gender", "==", "F"))
-          .join(dept.filter(E.cmp("location", "==", "us")),
-                "dep", "dept_id")
-          .join(sal.filter(E.cmp("from_year", ">=", 2010)),
-                "emp_id", "sal_emp_id")
-          .project("name", "dept_name", "from_year"))
-    q3 = (emp.filter(E.cmp("age", ">", 30))
-          .join(sal.filter(E.cmp("salary", ">", 30000)),
-                "emp_id", "sal_emp_id")
-          .project("emp_id", "name", "salary", "from_year"))
+    q2 = (emp.where(c.gender == "F")
+          .join(dept.where(c.location == "us"), "dep", "dept_id")
+          .join(sal.where(c.from_year >= 2010), "emp_id", "sal_emp_id")
+          .select("name", "dept_name", "from_year"))
+    q3 = (emp.where(c.age > 30)
+          .join(sal.where(c.salary > 30000), "emp_id", "sal_emp_id")
+          .select("emp_id", "name", "salary", "from_year"))
 
-    print("=== query 1 (locally optimized) ===")
-    from repro.relational.rules import optimize_single
+    print("=== query 1 (canonical logical plan) ===")
+    print(q1.explain_str(show_schema=True))
 
-    print(L.explain(optimize_single(q1)))
+    # any spelling of the same predicate compiles to the same
+    # fingerprint: literal-on-left, pushed negation, swapped conjuncts
+    q1_variant = (emp.where(~(c.gender != "F"))
+                  .join(dept.where("us" == c.location), "dep", "dept_id")
+                  .join(sal.where(20000 < c.salary), "emp_id",
+                        "sal_emp_id")
+                  .select("name", "dept_name", "salary")
+                  .sort("salary", desc=True))
+    same = (q1.logical_plan() == q1_variant.logical_plan())
+    print(f"\nsyntactic variant canonicalizes identically: {same}")
 
     base = sess.run_batch([q1, q2, q3], mqo=False)
     opt = sess.run_batch([q1, q2, q3], mqo=True)
@@ -137,15 +147,13 @@ def main():
     # salaries is range-partitioned on salary: a selective filter scans
     # only the partitions whose [min, max] can satisfy it
     info = sess.stats.partitions["salaries"]
-    pred = E.cmp("salary", ">", 80_000)
+    high_pay = c.salary > 80_000
     from repro.relational import prune_parts
 
-    live = prune_parts(pred, info)
+    live = prune_parts(high_pay.expr, info)
     print(f"\npartitioned scan: salary>80000 touches "
           f"{len(live)}/{info.n_partitions} partitions {list(live)}")
-    top = sess.run_batch(
-        [sess.table("salaries").filter(pred)
-         .project("sal_emp_id", "salary")], mqo=False).results[0].table
+    top = (sal.where(high_pay).select("sal_emp_id", "salary")).collect()
     print(f"rows={top.nrows} (pruned scan, bit-identical to unpruned)")
 
 

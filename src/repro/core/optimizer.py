@@ -32,6 +32,7 @@ class MQOReport:
     n_items: int = 0
     n_resident: int = 0
     n_single_resume: int = 0
+    n_hinted: int = 0             # CEs re-priced by a cache_hint()
     n_partitioned: int = 0        # CEs split into per-partition items
     n_partition_items: int = 0
     n_resident_parts: int = 0     # partitions re-priced as already paid
@@ -81,7 +82,8 @@ class MultiQueryOptimizer:
 
     def optimize(self, plans: Sequence[PlanNode], *,
                  resident: Optional[Mapping[bytes, object]] = None,
-                 resident_parts: Optional[Mapping[bytes, object]] = None
+                 resident_parts: Optional[Mapping[bytes, object]] = None,
+                 hinted: Optional[frozenset] = None
                  ) -> OptimizedBatch:
         """Run the four phases.  ``resident`` maps the ψ of every CE
         still materialized from a previous window (the unified
@@ -102,7 +104,14 @@ class MultiQueryOptimizer:
         but when their ψ matches a resident CE they are admitted as
         single-member SEs — a lone recurring query can resume from a
         still-resident covering relation instead of recomputing
-        (non-matching singles price at negative value and drop out)."""
+        (non-matching singles price at negative value and drop out).
+
+        ``hinted`` is the set of loose ψ under ``cache_hint()``-marked
+        submissions: their sub-k SEs are admitted as candidates too,
+        and a hinted CE that prices at ≤ 0 is re-priced with one
+        *phantom future consumer* (the hint asserts the query recurs),
+        so a lone hinted query can materialize covering state for later
+        windows to resume from — still subject to the budget."""
         t0 = time.perf_counter()
         report = MQOReport(n_queries=len(plans), budget=self.budget)
         res: Mapping[bytes, frozenset] = {}
@@ -110,18 +119,20 @@ class MultiQueryOptimizer:
             res = {psi: (frozenset((s,)) if isinstance(s, bytes)
                          else frozenset(s))
                    for psi, s in resident.items()}
+        hinted = hinted or frozenset()
 
         # Phase 1: similar subexpression identification (Algorithm 1).
-        if res and self.k > 1:
+        if (res or hinted) and self.k > 1:
             # one k=1 walk, partitioned: the >= k SEs are exactly what
             # identify(k=self.k) returns (k only filters at the end),
-            # and sub-k SEs whose structure matches a resident CE are
-            # admitted too, so the strict content check below can
-            # decide single-query resident resume
+            # and sub-k SEs whose structure matches a resident CE (or a
+            # cache hint) are admitted too, so the strict content check
+            # below can decide single-query resident resume
             every = identify_similar_subexpressions(plans, k=1)
             ses = [se for se in every if se.m >= self.k]
             ses += [se for se in every
-                    if se.m < self.k and se.psi in res]
+                    if se.m < self.k and (se.psi in res
+                                          or se.psi in hinted)]
         else:
             ses = identify_similar_subexpressions(plans, k=self.k)
         report.n_ses = len(ses)
@@ -137,6 +148,20 @@ class MultiQueryOptimizer:
 
         # Phase 2b: pricing (Eq. 1–3) + Algorithm 2 candidate groups.
         price_ces(ces, self.cost_model)
+        for ce in ces:
+            if ce.psi not in hinted or ce.value > 0:
+                continue
+            # phantom future consumer: the hint asserts the query
+            # recurs, so credit one extra read's worth of sharing —
+            # avg per-consumer unshared cost minus the read +
+            # extraction it would pay (never a net penalty)
+            d = ce.cost_detail
+            m = max(ce.m, 1)
+            marginal = ((d["C_omega"] - d["C_X"]) / m) - d["C_R"]
+            if marginal > 0:
+                ce.value += marginal
+                ce.cost_detail = {**d, "hinted": True}
+                report.n_hinted += 1
 
         # Partition-grained admission: split eligible CEs into
         # independent per-partition items so the solver can keep the

@@ -36,6 +36,9 @@ def compile_predicate(pred: E.Expr, col_names: Sequence[str]
 
     def walk(e: E.Expr):
         if isinstance(e, E.Cmp):
+            e = E.oriented(e)
+            if isinstance(e.col, E.Lit):
+                raise ValueError("constant compare unsupported in kernel")
             if isinstance(e.rhs, E.Col):
                 prog.append((_OPMAP[e.op] + "c", idx[e.col.name],
                              idx[e.rhs.name]))

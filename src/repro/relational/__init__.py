@@ -1,10 +1,15 @@
 # SparkSQL-analog relational substrate: columnar tables over JAX arrays,
-# logical plans, Catalyst-like local optimization, cardinality stats,
-# eager per-operator SPMD execution, the MQO integration, and the
-# online QueryService front-end (continuous submission + micro-batch
-# MQO windows).
+# the fluent lazy Relation frontend compiled through a canonical plan
+# IR, logical plans, Catalyst-like local optimization, cardinality
+# stats, eager per-operator SPMD execution, the MQO integration, and
+# the online QueryService front-end (continuous submission +
+# micro-batch MQO windows).
 from . import expr, logical
-from .datagen import generate_columns, make_storage, people_schema, synthetic_schema
+from .api import ColExpr, Pred, Relation, as_expr, c, col
+from .canonical import (FALSE, canonicalize_expr, canonicalize_plan,
+                        format_plan)
+from .datagen import (generate_columns, make_storage, people_schema,
+                      synthetic_schema)
 from .executor import BatchResult, QueryResult, Session
 from .fuse import FusedPipeline, fuse_plan
 from .partition import (CePartition, PartitionInfo, PartitionedCePlan,

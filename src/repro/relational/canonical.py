@@ -1,0 +1,231 @@
+"""Canonical plan IR: the normalization pass in front of fingerprinting.
+
+The paper's sharing machinery (loose ψ for structure, strict content
+fingerprints for cache identity) only pays off when *semantically*
+equivalent queries reach it as *syntactically* equal trees.  Clients —
+and the fluent :mod:`relational.api` builder — produce many spellings
+of the same query: reordered conjuncts, ``Not(x >= 5)`` instead of
+``x < 5``, literal-on-left compares, stacked filters, redundant
+projections.  This module rewrites every plan into one normal form, so
+all those spellings map to ONE ψ and ONE strict fingerprint — and the
+MQO can actually share their work.
+
+Expression normal form (:func:`canonicalize_expr`):
+
+  * **negation normal form** — ``Not`` is pushed through ``And``/``Or``
+    (De Morgan), double negations cancel, and ``Not(Cmp)`` folds into
+    the complementary operator; the only surviving ``Not`` is
+    ``Not(TRUE)`` (the engine's FALSE).
+  * **orientation** — literal-on-left compares flip to column-on-left
+    (``5 < price`` ⇒ ``price > 5``).
+  * **constant folding** — Lit-Lit compares evaluate; a false conjunct
+    collapses the ``And``, a true disjunct collapses the ``Or``;
+    ``TRUE`` conjuncts / ``FALSE`` disjuncts are pruned.
+  * **flatten + sort + dedup** — nested ``And``/``Or`` flatten into one
+    n-ary node whose parts are deduplicated and sorted by their
+    canonical key (commutativity).
+
+Plan normal form (:func:`canonicalize_plan`):
+
+  * every ``Filter`` predicate is canonicalized; ``Filter(TRUE)``
+    disappears; adjacent Filters merge into one conjunction.
+  * **projection normal form** — duplicate columns are dropped,
+    ``Project(Project(x))`` collapses, and an identity projection
+    (exactly the child's schema, in order) disappears.
+
+The pass is applied by the service layer to *every* submitted plan —
+builder-made or hand-made — before local optimization and
+fingerprinting, so legacy ``logical.Node`` trees get the same identity
+as their :class:`~repro.relational.api.Relation` equivalents.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import replace
+from typing import List
+
+from . import expr as E
+from . import logical as L
+
+#: The engine's FALSE: ``Not(TRUE)`` — representable everywhere ``Not``
+#: and ``TrueExpr`` are (eval, pruning, stats), without a new IR node.
+FALSE = E.Not(E.TRUE)
+
+
+def is_true(e: E.Expr) -> bool:
+    return isinstance(e, E.TrueExpr)
+
+
+def is_false(e: E.Expr) -> bool:
+    return isinstance(e, E.Not) and isinstance(e.part, E.TrueExpr)
+
+
+# ---------------------------------------------------------------------------
+# expression canonicalization
+# ---------------------------------------------------------------------------
+def canonicalize_expr(e: E.Expr) -> E.Expr:
+    """Rewrite ``e`` into the canonical normal form described above.
+
+    Semantics-preserving on every value the engine can hold: the
+    canonical expression evaluates to the same row mask as the
+    original (property-tested in tests/test_canonical.py).  The
+    ordered-complement fold (``¬(x <= v)`` → ``x > v``) additionally
+    assumes totally ordered column domains — IEEE NaN would satisfy
+    neither side — which holds because ``build_table_stats`` rejects
+    non-finite float columns at registration, the only catalog entry
+    point."""
+    return _canon(e, negate=False)
+
+
+def _canon(e: E.Expr, negate: bool) -> E.Expr:
+    if isinstance(e, E.TrueExpr):
+        return FALSE if negate else E.TRUE
+    if isinstance(e, E.Not):
+        return _canon(e.part, not negate)      # ¬¬x = x
+    if isinstance(e, E.Cmp):
+        c = E.oriented(e)
+        if negate:
+            if _nonfinite_lit(c):
+                # IEEE NaN/inf literal: the operator complement is NOT
+                # the negation (NaN satisfies neither x>v nor x<=v), so
+                # keep the Not node — correctness over normalization
+                return E.Not(c)
+            c = E.Cmp(E.NEGATE[c.op], c.col, c.rhs)
+        if isinstance(c.col, E.Lit) and isinstance(c.rhs, E.Lit):
+            return E.TRUE if E.const_cmp(c) else FALSE
+        return c
+    if isinstance(e, (E.And, E.Or)):
+        # De Morgan: ¬(a ∧ b) = ¬a ∨ ¬b  (and dually)
+        conj = isinstance(e, E.And) ^ negate
+        parts = [_canon(p, negate) for p in e.parts]
+        return _normal_nary(parts, conj)
+    raise TypeError(type(e))
+
+
+def _nonfinite_lit(e: E.Cmp) -> bool:
+    return any(isinstance(s, E.Lit) and isinstance(s.value, float)
+               and not math.isfinite(s.value)
+               for s in (e.col, e.rhs))
+
+
+def _normal_nary(parts: List[E.Expr], conj: bool) -> E.Expr:
+    """Flatten / constant-fold / dedup / sort an n-ary And (conj=True)
+    or Or (conj=False) over already-canonical parts."""
+    absorb, neutral = (is_false, is_true) if conj else (is_true, is_false)
+    flat: List[E.Expr] = []
+    stack = list(reversed(parts))
+    while stack:
+        p = stack.pop()
+        if isinstance(p, E.And if conj else E.Or):
+            stack.extend(reversed(p.parts))
+            continue
+        if absorb(p):                  # FALSE ∧ … / TRUE ∨ …
+            return FALSE if conj else E.TRUE
+        if not neutral(p):             # drop TRUE ∧ … / FALSE ∨ …
+            flat.append(p)
+    keyed = {E.canonical(p): p for p in flat}
+    ordered = [keyed[k] for k in sorted(keyed)]
+    if not ordered:
+        return E.TRUE if conj else FALSE
+    if len(ordered) == 1:
+        return ordered[0]
+    return E.And(tuple(ordered)) if conj else E.Or(tuple(ordered))
+
+
+# ---------------------------------------------------------------------------
+# plan canonicalization
+# ---------------------------------------------------------------------------
+def canonicalize_plan(node: L.Node) -> L.Node:
+    """Rewrite ``node`` (bottom-up) into the plan normal form.
+
+    Accepts anything :func:`logical.as_node` accepts (a Relation or a
+    raw Node) and always returns a raw ``logical.Node``."""
+    node = L.as_node(node)
+    if node.children:
+        node = node.with_children(
+            tuple(canonicalize_plan(c) for c in node.children))
+    if isinstance(node, L.Filter):
+        pred = canonicalize_expr(node.pred)
+        if is_true(pred):
+            return node.child
+        if isinstance(node.child, L.Filter):
+            # merge stacked filters into one conjunction (their masks
+            # compose by ∧ regardless of stacking order)
+            merged = _normal_nary([pred, node.child.pred], conj=True)
+            return replace(node.child, pred=merged) if not is_true(merged) \
+                else node.child.child
+        return replace(node, pred=pred)
+    if isinstance(node, L.Project):
+        # duplicate columns in a legacy hand-built Project denote the
+        # same physical relation (executed Tables are dicts keyed by
+        # column name, so duplicates collapse anyway); normalizing them
+        # away here makes the fingerprint match the bytes actually
+        # materialized.  The builder rejects duplicates outright.
+        cols, seen = [], set()
+        for c in node.cols:
+            if c not in seen:
+                seen.add(c)
+                cols.append(c)
+        child = node.child
+        if isinstance(child, L.Project):
+            child = child.child            # Project∘Project collapses
+        if tuple(cols) == tuple(child.schema.names):
+            return child                   # identity projection
+        return replace(node, child=child, cols=tuple(cols))
+    return node
+
+
+# ---------------------------------------------------------------------------
+# plan pretty-printer (Relation.explain_str / QueryHandle.explain)
+# ---------------------------------------------------------------------------
+def format_plan(node: L.Node, *, show_schema: bool = False) -> str:
+    """Human-oriented plan rendering: one node per line, box-drawing
+    tree rails, operator attributes inline, optionally each node's
+    output schema."""
+    node = L.as_node(node)
+    lines: List[str] = []
+
+    def detail(n: L.Node) -> str:
+        if isinstance(n, L.Scan):
+            parts = "" if n.parts is None else f" parts={list(n.parts)}"
+            return f"Scan {n.table} [{n.fmt}]{parts}"
+        if isinstance(n, L.CachedScan):
+            return f"CachedScan ψ={n.psi.hex()[:12]}"
+        if isinstance(n, L.Filter):
+            return f"Filter {E.pretty(n.pred)}"
+        if isinstance(n, L.Project):
+            return f"Project {', '.join(n.cols)}"
+        if isinstance(n, L.Join):
+            keys = ", ".join(f"{a}={b}" for a, b in n.on)
+            return f"Join [{keys}]"
+        if isinstance(n, L.Aggregate):
+            aggs = ", ".join(f"{o}={f}({c or '*'})" for o, f, c in n.aggs)
+            by = ", ".join(n.group_by) or "()"
+            return f"Aggregate by {by}: {aggs}"
+        if isinstance(n, L.Sort):
+            return f"Sort {n.by}{' desc' if n.desc else ''}"
+        if isinstance(n, L.Limit):
+            return f"Limit {n.n}"
+        if isinstance(n, L.Union):
+            return "Union"
+        if isinstance(n, L.Cache):
+            return f"Cache ψ={n.psi.hex()[:12]}"
+        extra = ""
+        if n.label == "fused":   # FusedPipeline without importing fuse
+            extra = (f" {E.pretty(n.pred)} → {', '.join(n.cols)}"
+                     if n.cols else f" {E.pretty(n.pred)}")
+        return f"{type(n).__name__}{extra}"
+
+    def walk(n: L.Node, prefix: str, tail: str) -> None:
+        text = detail(n)
+        if show_schema:
+            text += f"   ⟨{', '.join(n.schema.names)}⟩"
+        lines.append(prefix + text)
+        kids = n.children
+        for i, c in enumerate(kids):
+            last = i == len(kids) - 1
+            branch = tail + ("└─ " if last else "├─ ")
+            walk(c, branch, tail + ("   " if last else "│  "))
+
+    walk(node, "", "")
+    return "\n".join(lines)

@@ -15,7 +15,7 @@ from typing import Dict, Optional, Tuple
 import numpy as np
 
 from .physical import TableStorage
-from .schema import F32, I32, STR, ColType, Schema
+from .schema import F32, I32, STR, Schema
 
 
 def synthetic_schema(n_int: int = 10, n_dbl: int = 10, n_str: int = 10,

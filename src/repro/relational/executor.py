@@ -20,6 +20,7 @@ shims so existing call sites keep working.
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
 
@@ -34,9 +35,10 @@ from .partition import Partitioning, partition_table
 from .physical import ExecContext, ExecMetrics, TableStorage, execute
 from .rules import optimize_single
 from .schema import Table
-from .service import (ExecutionConfig, MemoryConfig, QueryService,
-                      SessionConfig)
+from .service import QueryService, SessionConfig
 from .stats import RelationalCostModel, StatsRegistry, build_table_stats
+
+_UNSET = object()   # "kwarg not passed" sentinel (legacy-shim detection)
 
 
 @dataclass
@@ -100,49 +102,45 @@ class Session:
     as deprecation shims (they are folded into ``self.config``).
     """
 
-    def __init__(self, budget_bytes: int = 1 << 30,
-                 sharding: Optional[jax.sharding.Sharding] = None,
-                 disk_latency_per_byte: float = 0.0,
-                 fuse: bool = True,
-                 defer_sync: bool = True,
-                 use_scan_cache: bool = True,
-                 policy: str = "lru",
-                 host_budget_bytes: Optional[int] = None,
-                 retain_across_batches: bool = True,
+    def __init__(self, budget_bytes=_UNSET,
+                 sharding=_UNSET,
+                 disk_latency_per_byte=_UNSET,
+                 fuse=_UNSET,
+                 defer_sync=_UNSET,
+                 use_scan_cache=_UNSET,
+                 policy=_UNSET,
+                 host_budget_bytes=_UNSET,
+                 retain_across_batches=_UNSET,
                  config: Optional[SessionConfig] = None):
-        if config is not None:
+        # sentinel defaults: "was this kwarg passed at all?" — the real
+        # default values live in ONE place (the ExecutionConfig /
+        # MemoryConfig dataclass fields; from_legacy_kwargs forwards
+        # only what was passed), and an explicitly-passed default still
+        # counts as a legacy kwarg (so mixing it with config= is caught
+        # instead of silently dropped)
+        passed = {k: v for k, v in dict(
+            budget_bytes=budget_bytes, sharding=sharding,
+            disk_latency_per_byte=disk_latency_per_byte, fuse=fuse,
+            defer_sync=defer_sync, use_scan_cache=use_scan_cache,
+            policy=policy, host_budget_bytes=host_budget_bytes,
+            retain_across_batches=retain_across_batches).items()
+            if v is not _UNSET}
+        if config is not None and passed:
             # a config must be the WHOLE configuration — mixing it with
             # legacy knobs would silently drop whichever loses
-            passed = dict(
-                budget_bytes=budget_bytes, sharding=sharding,
-                disk_latency_per_byte=disk_latency_per_byte, fuse=fuse,
-                defer_sync=defer_sync, use_scan_cache=use_scan_cache,
-                policy=policy, host_budget_bytes=host_budget_bytes,
-                retain_across_batches=retain_across_batches)
-            defaults = dict(
-                budget_bytes=1 << 30, sharding=None,
-                disk_latency_per_byte=0.0, fuse=True, defer_sync=True,
-                use_scan_cache=True, policy="lru",
-                host_budget_bytes=None, retain_across_batches=True)
-            clashing = [k for k, v in passed.items() if v != defaults[k]]
-            if clashing:
-                raise ValueError(
-                    f"pass either config= or the legacy keyword "
-                    f"arguments, not both (got {clashing})")
+            raise ValueError(
+                f"pass either config= or the legacy keyword "
+                f"arguments, not both (got {sorted(passed)})")
         if config is None:
             # deprecation shim: fold the legacy knob sprawl into the
             # unified config (execution / memory / mqo sub-configs)
-            config = SessionConfig(
-                execution=ExecutionConfig(
-                    fuse=fuse, defer_sync=defer_sync,
-                    use_scan_cache=use_scan_cache, sharding=sharding,
-                    disk_latency_per_byte=disk_latency_per_byte),
-                memory=MemoryConfig(
-                    budget_bytes=int(budget_bytes),
-                    host_budget_bytes=host_budget_bytes,
-                    policy=policy,
-                    retain_across_batches=retain_across_batches),
-            )
+            if passed:
+                warnings.warn(
+                    f"Session keyword arguments {sorted(passed)} are "
+                    f"deprecated — build a SessionConfig and use "
+                    f"Session.from_config(...)", DeprecationWarning,
+                    stacklevel=2)
+            config = SessionConfig.from_legacy_kwargs(**passed)
         self.config = config
         ex, mem = config.execution, config.memory
 
@@ -233,7 +231,17 @@ class Session:
             build_table_stats(cols, storage.nrows, storage.schema),
             partitions=storage.partitions)
 
-    def table(self, name: str) -> L.Scan:
+    def table(self, name: str):
+        """The catalog table as a fluent lazy :class:`Relation` — the
+        root of the builder API (``.where(c.x > 5).select(...)...``).
+        The Relation mirrors the legacy Node builder methods, so older
+        ``.filter(E.cmp(...))``-style call sites keep working."""
+        from .api import Relation
+
+        return Relation(self.scan_node(name), session=self)
+
+    def scan_node(self, name: str) -> L.Scan:
+        """The raw logical Scan leaf (the pre-Relation ``table()``)."""
         st = self.catalog[name]
         return L.scan(name, st.schema, st.fmt)
 
@@ -295,6 +303,7 @@ class Session:
 
     def run_one(self, plan: L.Node,
                 ctx: Optional[ExecContext] = None) -> QueryResult:
+        plan = L.as_node(plan)
         ctx = ctx or self._fresh_ctx()
         t0 = time.perf_counter()
         table = execute(plan, ctx)
@@ -336,8 +345,9 @@ class Session:
                             ) -> BatchResult:
         """Cache the entire input relations on first touch (§6.3 'FC')."""
         from ..core.fingerprint import fingerprint
+        from .canonical import canonicalize_plan
 
-        plans = [optimize_single(p) for p in plans]
+        plans = [optimize_single(canonicalize_plan(p)) for p in plans]
         budget = budget_bytes if budget_bytes is not None else self.budget
         cache = CacheManager(budget, spill_fn=_spill_to_host,
                              unspill_fn=_unspill)

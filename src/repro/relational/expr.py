@@ -8,7 +8,7 @@ selectivity estimation.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, FrozenSet, Sequence, Tuple, Union
+from typing import Dict, FrozenSet, Tuple, Union
 
 import jax.numpy as jnp
 import numpy as np
@@ -30,12 +30,41 @@ class Lit:
 
 @dataclass(frozen=True)
 class Cmp:
+    """Binary comparison.  ``col`` is normally a :class:`Col`, but a
+    reversed literal compare (``Lit op Col`` — "literal on the left",
+    e.g. ``5 < price``) is representable too: canonicalization
+    (relational.canonical) flips it to the column-on-left normal form,
+    and every consumer that predates the flip (eval, kernel compile)
+    normalizes on the fly via :func:`oriented`."""
+
     op: str
-    col: Col
+    col: Union[Col, Lit]
     rhs: Union[Lit, Col]
 
     def __post_init__(self):
         assert self.op in _OPS, self.op
+
+
+# mirror the comparison when its operands are swapped (a < b ⟺ b > a)
+MIRROR = {"<": ">", "<=": ">=", ">": "<", ">=": "<=",
+          "==": "==", "!=": "!="}
+# negate the comparison (¬(a < b) ⟺ a >= b)
+NEGATE = {"<": ">=", "<=": ">", ">": "<=", ">=": "<",
+          "==": "!=", "!=": "=="}
+
+
+def oriented(e: Cmp) -> Cmp:
+    """Normal orientation of a single compare: column-on-left for
+    Lit/Col operands, and name-ordered sides for Col-Col compares (so
+    ``a < b`` and ``b > a`` share one canonical form).  Identity for
+    already-oriented compares; Lit-Lit compares are returned unchanged
+    — constant folding handles them."""
+    if isinstance(e.col, Lit) and isinstance(e.rhs, Col):
+        return Cmp(MIRROR[e.op], e.rhs, e.col)
+    if (isinstance(e.col, Col) and isinstance(e.rhs, Col)
+            and e.rhs.name < e.col.name):
+        return Cmp(MIRROR[e.op], e.rhs, e.col)
+    return e
 
 
 @dataclass(frozen=True)
@@ -101,6 +130,8 @@ def or_(*parts: Expr) -> Expr:
         if key not in seen:
             seen.add(key)
             uniq.append(p)
+    if not uniq:
+        return Not(TRUE)   # empty disjunction is FALSE (canonical.FALSE)
     return uniq[0] if len(uniq) == 1 else Or(tuple(uniq))
 
 
@@ -116,6 +147,10 @@ def canonical(e: Expr) -> tuple:
     if isinstance(e, TrueExpr):
         return ("true",)
     if isinstance(e, Cmp):
+        e = oriented(e)
+        if isinstance(e.col, Lit):   # Lit-Lit: constant, key on values
+            return ("cmp2", e.op, _lit_key(e.col.value),
+                    _lit_key(e.rhs.value))
         rhs = (("col", e.rhs.name) if isinstance(e.rhs, Col)
                else ("lit", _lit_key(e.rhs.value)))
         return ("cmp", e.op, e.col.name, rhs)
@@ -144,7 +179,9 @@ def columns_of(e: Expr) -> FrozenSet[str]:
     if isinstance(e, TrueExpr):
         return frozenset()
     if isinstance(e, Cmp):
-        cols = {e.col.name}
+        cols = set()
+        if isinstance(e.col, Col):
+            cols.add(e.col.name)
         if isinstance(e.rhs, Col):
             cols.add(e.rhs.name)
         return frozenset(cols)
@@ -175,6 +212,11 @@ def eval_expr(e: Expr, columns: Dict[str, jnp.ndarray]) -> jnp.ndarray:
         n = next(iter(columns.values())).shape[0]
         return jnp.ones((n,), jnp.bool_)
     if isinstance(e, Cmp):
+        e = oriented(e)
+        if isinstance(e.col, Lit):   # Lit-Lit: constant boolean
+            n = next(iter(columns.values())).shape[0]
+            fill = jnp.ones if const_cmp(e) else jnp.zeros
+            return fill((n,), jnp.bool_)
         lhs = columns[e.col.name]
         if isinstance(e.rhs, Col):
             rhs = columns[e.rhs.name]
@@ -225,6 +267,31 @@ def eval_expr(e: Expr, columns: Dict[str, jnp.ndarray]) -> jnp.ndarray:
     raise TypeError(type(e))
 
 
+def const_cmp(e: Cmp) -> bool:
+    """Evaluate a Lit-Lit compare to its constant truth value.
+
+    Cross-category operands (a number vs a string/bytes) are ordered
+    by a fixed category rank (numbers before byte strings) rather than
+    special-cased per operator: a mere "incomparables are unequal"
+    fallback would NOT be closed under the operator complement — both
+    ``<`` and its negation ``>=`` would fold to False — and the
+    canonicalization pass (which folds ``Not(Cmp)`` via NEGATE) would
+    then disagree with the un-canonicalized eval path."""
+    a, b = e.col.value, e.rhs.value
+    if isinstance(a, str):
+        a = a.encode("utf-8")
+    if isinstance(b, str):
+        b = b.encode("utf-8")
+    a_num, b_num = isinstance(a, (int, float)), isinstance(b, (int, float))
+    if a_num != b_num:
+        a, b = (0, 1) if a_num else (1, 0)
+    return {
+        "<": lambda: a < b, "<=": lambda: a <= b,
+        ">": lambda: a > b, ">=": lambda: a >= b,
+        "==": lambda: a == b, "!=": lambda: a != b,
+    }[e.op]()
+
+
 def fold_int_cmp(op: str, v: float):
     """Fold a fractional-threshold compare over an INTEGER column into
     an exact integer compare (promoting the column to f32 would be
@@ -253,8 +320,9 @@ def pretty(e: Expr) -> str:
     if isinstance(e, TrueExpr):
         return "true"
     if isinstance(e, Cmp):
+        lhs = e.col.name if isinstance(e.col, Col) else repr(e.col.value)
         rhs = e.rhs.name if isinstance(e.rhs, Col) else repr(e.rhs.value)
-        return f"{e.col.name}{e.op}{rhs}"
+        return f"{lhs}{e.op}{rhs}"
     if isinstance(e, And):
         return "(" + " & ".join(pretty(p) for p in e.parts) + ")"
     if isinstance(e, Or):

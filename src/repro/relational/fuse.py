@@ -115,6 +115,7 @@ def _collapse_chain(node: L.Node) -> Optional[FusedPipeline]:
 
 def fuse_plan(root: L.Node) -> L.Node:
     """Rewrite every maximal fusable chain in ``root`` (top-down)."""
+    root = L.as_node(root)
     if isinstance(root, FusedPipeline):
         return root
     if isinstance(root, (L.Filter, L.Project)):

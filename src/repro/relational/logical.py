@@ -447,7 +447,24 @@ def scan(table: str, schema: Schema, fmt: str = "columnar") -> Scan:
     return Scan(table=table, fmt=fmt, _schema=schema)
 
 
+def as_node(obj) -> Node:
+    """Coerce a plan-like object to a raw logical Node.
+
+    The fluent :class:`~repro.relational.api.Relation` (and anything
+    else wrapping a plan) exposes ``__plan_node__``; raw Nodes pass
+    through.  Every plan *sink* (execute, optimize_single, fuse_plan,
+    the service/session entry points) funnels through this, so the two
+    frontends meet one code path."""
+    hook = getattr(obj, "__plan_node__", None)
+    if hook is not None:
+        return hook()
+    if not isinstance(obj, Node):
+        raise TypeError(f"not a logical plan: {type(obj).__name__}")
+    return obj
+
+
 def explain(node: Node, indent: int = 0) -> str:
+    node = as_node(node)
     pad = "  " * indent
     extra = ""
     if isinstance(node, Filter):

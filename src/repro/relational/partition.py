@@ -246,6 +246,9 @@ def _part_maybe(e: E.Expr, stats: Dict[str, PartColStats],
     if isinstance(e, E.TrueExpr):
         return True
     if isinstance(e, E.Cmp):
+        e = E.oriented(e)
+        if isinstance(e.col, E.Lit):       # Lit-Lit: exact constant
+            return E.const_cmp(e)
         if isinstance(e.rhs, E.Col):
             return unknown
         cs = stats.get(e.col.name)
@@ -314,7 +317,7 @@ def linear_scan_chain(tree: L.Node
     cached leaves).  This is the partitionable-CE eligibility test —
     the dominant CE shape after MQO rewriting (ROADMAP)."""
     preds: List[E.Expr] = []
-    cur = tree
+    cur = L.as_node(tree)
     while isinstance(cur, (L.Filter, L.Project)):
         if isinstance(cur, L.Filter):
             preds.append(cur.pred)
@@ -326,6 +329,7 @@ def linear_scan_chain(tree: L.Node
 
 def restrict_to_parts(tree: L.Node, parts: Tuple[int, ...]) -> L.Node:
     """The same plan with its Scan leaf restricted to ``parts``."""
+    tree = L.as_node(tree)
     if isinstance(tree, L.Scan):
         from dataclasses import replace
 

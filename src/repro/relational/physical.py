@@ -1068,6 +1068,7 @@ def _exec_fused(node: FusedPipeline, ctx: ExecContext) -> Table:
 def execute(node: L.Node, ctx: ExecContext) -> Table:
     from .stats import required_columns
 
+    node = L.as_node(node)
     if ctx.fuse:
         node = fuse_plan(node)
     req = required_columns(node)

@@ -114,6 +114,7 @@ def _prune_columns(node: L.Node, needed: FrozenSet[str]) -> L.Node:
 
 def optimize_single(plan: L.Node) -> L.Node:
     """Catalyst-analog local optimization to a (bounded) fixpoint."""
+    plan = L.as_node(plan)
     for _ in range(3):
         new = _push_filter(plan)
         new = _collapse_projects(new)

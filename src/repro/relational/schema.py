@@ -117,7 +117,8 @@ class Table:
         for n, t in self.schema.fields:
             arr = self.columns[n]
             if t.kind == "str":
-                assert arr.ndim == 2 and arr.shape[1] == t.width, (n, arr.shape)
+                assert arr.ndim == 2 and arr.shape[1] == t.width, \
+                    (n, arr.shape)
             else:
                 assert arr.ndim == 1, (n, arr.shape)
 

@@ -48,15 +48,38 @@ shims.
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass, field, replace
 from typing import Any, Dict, List, Optional, Sequence, Set
 
+from ..core.fingerprint import fingerprint_set
 from ..core.optimizer import MultiQueryOptimizer
 from . import logical as L
+from .canonical import canonicalize_plan
 from .rewriter import RelationalRewriter, make_ce_transform
 from .rules import optimize_single
 
 _UNSET = object()
+
+
+def _coerce_submission(plan, entry: str, stacklevel: int = 3):
+    """(logical node, cache hint) for a submitted query.
+
+    :class:`~repro.relational.api.Relation` is the supported frontend;
+    raw ``logical.Node`` trees still work as a compat shim but are on a
+    deprecation path — they miss the builder's ergonomics, not its
+    sharing (both are canonicalized identically downstream).
+    ``stacklevel`` points the warning at the caller's call site (the
+    run_batch path has more intermediate frames than submit)."""
+    hook = getattr(plan, "__plan_node__", None)
+    if hook is not None:
+        return hook(), bool(getattr(plan, "hint_cache", False))
+    node = L.as_node(plan)
+    warnings.warn(
+        f"passing raw logical.Node trees to {entry} is deprecated — "
+        f"build queries with the Relation API (session.table(...)"
+        f".where(...)...)", DeprecationWarning, stacklevel=stacklevel)
+    return node, False
 
 
 # ---------------------------------------------------------------------------
@@ -131,19 +154,54 @@ class SessionConfig:
     def with_mqo(self, **kw) -> "SessionConfig":
         return replace(self, mqo=replace(self.mqo, **kw))
 
+    _LEGACY_EXECUTION_KEYS = frozenset(
+        ("fuse", "defer_sync", "use_scan_cache", "sharding",
+         "disk_latency_per_byte"))
+    _LEGACY_MEMORY_KEYS = frozenset(
+        ("budget_bytes", "host_budget_bytes", "policy",
+         "retain_across_batches"))
+
+    @classmethod
+    def from_legacy_kwargs(cls, **kw) -> "SessionConfig":
+        """Fold the pre-SessionConfig ``Session(...)`` keyword knobs
+        into the unified config (the shared shim behind the legacy
+        constructor path and helpers like ``build_tpcds_session``).
+        Only keys actually passed are forwarded, so the sub-config
+        dataclass field defaults stay the single source of truth."""
+        unknown = set(kw) - cls._LEGACY_EXECUTION_KEYS \
+            - cls._LEGACY_MEMORY_KEYS
+        if unknown:
+            raise TypeError(
+                f"unknown legacy Session kwargs: {sorted(unknown)}")
+        ex = {k: v for k, v in kw.items()
+              if k in cls._LEGACY_EXECUTION_KEYS}
+        mem = {k: v for k, v in kw.items()
+               if k in cls._LEGACY_MEMORY_KEYS}
+        if "budget_bytes" in mem:
+            mem["budget_bytes"] = int(mem["budget_bytes"])
+        return cls(execution=ExecutionConfig(**ex),
+                   memory=MemoryConfig(**mem))
+
 
 # ---------------------------------------------------------------------------
 # lazy handles
 # ---------------------------------------------------------------------------
 class QueryHandle:
-    """A submitted query: resolves when its micro-batch window runs."""
+    """A submitted query: resolves when its micro-batch window runs.
 
-    __slots__ = ("plan", "seq", "_service", "_query_result", "_explain",
-                 "_done")
+    ``plan`` is the object as submitted (a Relation or a legacy raw
+    Node — provenance for ``explain()``); ``node`` is the underlying
+    logical tree the window optimizes."""
 
-    def __init__(self, service: "QueryService", plan: L.Node, seq: int):
+    __slots__ = ("plan", "node", "hint_cache", "seq", "_service",
+                 "_query_result", "_explain", "_done")
+
+    def __init__(self, service: "QueryService", plan, seq: int, *,
+                 node: Optional[L.Node] = None, hint_cache: bool = False):
         self._service = service
         self.plan = plan
+        self.node = node if node is not None else L.as_node(plan)
+        self.hint_cache = hint_cache
         self.seq = seq                  # submission order, service-wide
         self._query_result = None
         self._explain = None
@@ -228,16 +286,20 @@ class QueryService:
         self._n_submitted = 0
 
     # -- submission ----------------------------------------------------------
-    def submit(self, plan: L.Node) -> QueryHandle:
+    def submit(self, plan) -> QueryHandle:
         """Add one query to the open window (opening one if needed).
 
+        ``plan`` is a :class:`~repro.relational.api.Relation` (raw
+        ``logical.Node`` trees remain a deprecated compat shim).
         Returns immediately with a lazy :class:`QueryHandle`.  If the
         previous window's deadline has passed, it is flushed first (its
         queries were due); if this arrival fills the window to
         ``max_batch``, the window closes inside this call.
         """
         self.flush_expired()
-        handle = QueryHandle(self, plan, self._n_submitted)
+        node, hint = _coerce_submission(plan, "QueryService.submit")
+        handle = QueryHandle(self, plan, self._n_submitted, node=node,
+                             hint_cache=hint)
         self._n_submitted += 1
         if not self._pending:
             self._opened_at = self._clock()
@@ -286,7 +348,17 @@ class QueryService:
         """The one-shot path: a pre-closed window over ``plans`` (no
         accumulation, independent of the open window).  This is what
         ``Session.run_batch`` routes through."""
-        handles = [QueryHandle(self, p, -1) for p in plans]
+        plans = list(plans)   # the input may be a one-shot iterator
+        # plain loop, not a comprehension: comprehension frames differ
+        # across Python versions (PEP 709), which would skew the
+        # warning's stacklevel.  Frames above the warn: _coerce(1),
+        # run_closed(2), run_batch(3), the user's call site(4).
+        coerced = []
+        for p in plans:
+            coerced.append(
+                _coerce_submission(p, "Session.run_batch", stacklevel=4))
+        handles = [QueryHandle(self, p, -1, node=n, hint_cache=h)
+                   for p, (n, h) in zip(plans, coerced)]
         return self._run_window(handles, mqo=mqo, k=k,
                                 budget_bytes=budget_bytes,
                                 locally_optimize=locally_optimize)
@@ -314,9 +386,17 @@ class QueryService:
         budget_req = (self.budget_bytes if budget_bytes is _UNSET
                       else budget_bytes)
 
-        plans = [h.plan for h in handles]
+        # The canonicalization pass runs for EVERY plan — builder-made
+        # or hand-made — before anything fingerprints, so syntactic
+        # variants (shuffled conjuncts, pushed negations, flipped
+        # compares, redundant projections) map to one ψ and one strict
+        # fingerprint.  It brackets local optimization: equal canonical
+        # inputs make the deterministic single-query pass emit equal
+        # trees, and the trailing pass restores normal form on whatever
+        # that pass rebuilt.
+        plans = [canonicalize_plan(h.node) for h in handles]
         if local:
-            plans = [optimize_single(p) for p in plans]
+            plans = [canonicalize_plan(optimize_single(p)) for p in plans]
 
         if not mqo:
             ctx = sess._fresh_ctx()
@@ -328,6 +408,16 @@ class QueryService:
                           executed_plans=plans, ce_by_key={},
                           pre_resident=frozenset())
             return batch
+
+        # cache_hint() submissions: every loose ψ under a hinted plan is
+        # an SE candidate even with a single consumer, re-priced with a
+        # phantom future consumer (see MultiQueryOptimizer.optimize).
+        # Computed only on the MQO path — the Merkle walks would be
+        # wasted work under mqo=False.
+        hinted = frozenset()
+        for h, p in zip(handles, plans):
+            if h.hint_cache:
+                hinted |= fingerprint_set(p)
 
         budget = budget_req if budget_req is not None else sess.budget
         cache = sess._ce_cache
@@ -374,7 +464,8 @@ class QueryService:
                 resident.setdefault(psi, set()).add(sfp)
             resident_parts = sess.ce_resident_parts()
         optimized = optimizer.optimize(list(plans), resident=resident,
-                                       resident_parts=resident_parts)
+                                       resident_parts=resident_parts,
+                                       hinted=hinted)
 
         ces = optimized.rewritten.ces
         # strict keys cannot collide across content, so no stale-entry

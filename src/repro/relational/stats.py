@@ -60,6 +60,21 @@ def build_table_stats(columns: Dict[str, np.ndarray], nrows: int,
             ndv = len(np.unique(flat))
             ts.columns[name] = ColumnStats(count=nrows, ndv=max(1, ndv))
         else:
+            if (np.issubdtype(arr.dtype, np.floating)
+                    and not np.isfinite(arr).all()):
+                # checked over the FULL column, not the stats sample —
+                # a sampled check would let NaN slip into large tables.
+                # Load-bearing invariant, not just hygiene: expression
+                # canonicalization (relational.canonical) folds
+                # ¬(x <= v) into x > v, which is only sound over
+                # totally ordered domains — NaN satisfies neither side.
+                # Rejecting NaN/inf here (the only catalog entry point)
+                # is what makes that rewrite semantics-preserving for
+                # every executable query.
+                raise ValueError(
+                    f"column {name!r} contains NaN/inf — non-finite "
+                    f"float data is unsupported (breaks ordered-"
+                    f"compare canonicalization and min/max statistics)")
             ndv = len(np.unique(arr_s))
             cs = ColumnStats(count=nrows, ndv=max(1, ndv),
                              vmin=float(arr_s.min()) if nrows else 0.0,
@@ -152,6 +167,9 @@ def selectivity(e: E.Expr, reg: StatsRegistry) -> float:
     if isinstance(e, E.TrueExpr):
         return 1.0
     if isinstance(e, E.Cmp):
+        e = E.oriented(e)
+        if isinstance(e.col, E.Lit):       # Lit-Lit constant compare
+            return 1.0 if E.const_cmp(e) else 0.0
         cs = reg.col(e.col.name)
         if isinstance(e.rhs, E.Col):
             cs2 = reg.col(e.rhs.name)

@@ -14,16 +14,16 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
-from . import expr as E
-from . import logical as L
+from .api import Relation, c
 from .executor import Session
-from .physical import TableStorage
 from .schema import F32, I32, STR, Schema
+from .service import SessionConfig
 
 STORE_SALES = Schema.of(
     ("ss_sold_date_sk", I32), ("ss_item_sk", I32), ("ss_customer_sk", I32),
-    ("ss_store_sk", I32), ("ss_quantity", I32), ("ss_wholesale_cost", F32),
-    ("ss_list_price", F32), ("ss_sales_price", F32), ("ss_ext_sales_price", F32),
+    ("ss_store_sk", I32), ("ss_quantity", I32),
+    ("ss_wholesale_cost", F32), ("ss_list_price", F32),
+    ("ss_sales_price", F32), ("ss_ext_sales_price", F32),
     ("ss_net_profit", F32),
 )
 ITEM = Schema.of(
@@ -123,11 +123,15 @@ def build_tpcds_session(scale_rows: int = 100_000, fmt: str = "columnar",
                         budget_bytes: int = 1 << 30, seed: int = 0,
                         **session_kw) -> Session:
     """``session_kw`` forwards memory-hierarchy knobs (policy,
-    host_budget_bytes, retain_across_batches, ...) to the Session."""
+    host_budget_bytes, retain_across_batches, ...); they are folded
+    into a :class:`SessionConfig` here, so this helper stays off the
+    deprecated legacy-kwargs path."""
     from .datagen import make_storage
 
     catalog = generate_tpcds_catalog(scale_rows, seed)
-    sess = Session(budget_bytes=budget_bytes, **session_kw)
+    cfg = SessionConfig.from_legacy_kwargs(budget_bytes=budget_bytes,
+                                           **session_kw)
+    sess = Session.from_config(cfg)
     for name, (schema, nrows, cols) in catalog.items():
         st, _ = make_storage(name, schema, nrows, fmt, cols=cols)
         sess.register(st, columnar_for_stats=cols)
@@ -137,8 +141,10 @@ def build_tpcds_session(scale_rows: int = 100_000, fmt: str = "columnar",
 # ---------------------------------------------------------------------------
 # the 50-query workload (parameterized template families)
 # ---------------------------------------------------------------------------
-def tpcds_queries(sess: Session) -> List[L.Node]:
-    """50 deterministic queries over the star schema.
+def tpcds_queries(sess: Session) -> List[Relation]:
+    """50 deterministic queries over the star schema, written against
+    the fluent :class:`Relation` frontend (``where``/``select`` with
+    the operator-overloaded ``c`` column namespace).
 
     Families (≈ TPC-DS query shapes, adapted to the engine's operator
     set): sales-by-category, customer demographics, store performance,
@@ -151,20 +157,20 @@ def tpcds_queries(sess: Session) -> List[L.Node]:
     st_ = sess.table("store")
     dd = sess.table("date_dim")
 
-    qs: List[L.Node] = []
+    qs: List[Relation] = []
 
     # F1 (10 queries): category sales report for a given year
     #   ss ⋈ item (by category filter) ⋈ date (by year) → agg by brand
-    for i, (year, cat) in enumerate(
-            [(1998, b"Books"), (1999, b"Books"), (2000, b"Electronics"),
-             (2001, b"Electronics"), (1998, b"Home"), (1999, b"Sports"),
-             (2000, b"Toys"), (2001, b"Music"), (1999, b"Shoes"),
-             (2000, b"Books")]):
-        q = (ss.join(it.filter(E.cmp("i_category", "==", cat)),
+    for year, cat in [(1998, b"Books"), (1999, b"Books"),
+                      (2000, b"Electronics"), (2001, b"Electronics"),
+                      (1998, b"Home"), (1999, b"Sports"),
+                      (2000, b"Toys"), (2001, b"Music"),
+                      (1999, b"Shoes"), (2000, b"Books")]:
+        q = (ss.join(it.where(c.i_category == cat),
                      "ss_item_sk", "i_item_sk")
-             .join(dd.filter(E.cmp("d_year", "==", int(year))),
+             .join(dd.where(c.d_year == int(year)),
                    "ss_sold_date_sk", "d_date_sk")
-             .groupby("i_brand_id")
+             .group_by("i_brand_id")
              .agg(("total_sales", "sum", "ss_ext_sales_price"),
                   ("n", "count", "")))
         qs.append(q)
@@ -173,55 +179,53 @@ def tpcds_queries(sess: Session) -> List[L.Node]:
     # the last two are loss-leader scans whose col-col compare now also
     # routes through the fused filter kernel (postfix "ltc" ops)
     for thr in (50, 60, 70, 80, 90, 55, 65, 75):
-        q = (ss.filter(E.and_(E.cmp("ss_sales_price", ">", float(thr)),
-                              E.cmp("ss_quantity", ">=", 10)))
-             .project("ss_item_sk", "ss_customer_sk", "ss_sales_price",
-                      "ss_net_profit"))
+        q = (ss.where((c.ss_sales_price > float(thr))
+                      & (c.ss_quantity >= 10))
+             .select("ss_item_sk", "ss_customer_sk", "ss_sales_price",
+                     "ss_net_profit"))
         qs.append(q)
     for min_qty in (10, 25):
-        q = (ss.filter(E.and_(E.col_cmp("ss_sales_price", "<",
-                                        "ss_wholesale_cost"),
-                              E.cmp("ss_quantity", ">=", min_qty)))
-             .project("ss_item_sk", "ss_customer_sk", "ss_sales_price",
-                      "ss_net_profit"))
+        q = (ss.where((c.ss_sales_price < c.ss_wholesale_cost)
+                      & (c.ss_quantity >= min_qty))
+             .select("ss_item_sk", "ss_customer_sk", "ss_sales_price",
+                     "ss_net_profit"))
         qs.append(q)
 
     # F3 (8 queries): customer demographics per gender / birth cohort
     for gender, y0 in [(b"F", 1960), (b"M", 1960), (b"F", 1975),
                        (b"M", 1975), (b"F", 1990), (b"M", 1990),
                        (b"F", 1950), (b"M", 1950)]:
-        q = (ss.join(cu.filter(E.and_(E.cmp("c_gender", "==", gender),
-                                      E.cmp("c_birth_year", ">=", y0))),
+        q = (ss.join(cu.where((c.c_gender == gender)
+                              & (c.c_birth_year >= y0)),
                      "ss_customer_sk", "c_customer_sk")
-             .groupby("c_birth_year")
+             .group_by("c_birth_year")
              .agg(("spend", "sum", "ss_ext_sales_price")))
         qs.append(q)
 
     # F4 (8 queries): store performance by state
     for state in STATES:
-        q = (ss.join(st_.filter(E.cmp("s_state", "==", state)),
+        q = (ss.join(st_.where(c.s_state == state),
                      "ss_store_sk", "s_store_sk")
-             .groupby("s_store_sk")
+             .group_by("s_store_sk")
              .agg(("profit", "sum", "ss_net_profit"),
                   ("vol", "sum", "ss_quantity")))
         qs.append(q)
 
     # F5 (6 queries): profitability scans (projection-heavy)
     for lo in (0.0, 10.0, 20.0, 30.0, 40.0, 50.0):
-        q = (ss.filter(E.cmp("ss_net_profit", ">", lo))
-             .project("ss_item_sk", "ss_net_profit")
+        q = (ss.where(c.ss_net_profit > lo)
+             .select("ss_item_sk", "ss_net_profit")
              .sort("ss_net_profit", desc=True)
              .limit(100))
         qs.append(q)
 
     # F6 (8 queries): monthly windows inside a year
-    for (year, moy) in [(1998, 11), (1998, 12), (1999, 11), (1999, 12),
-                        (2000, 6), (2000, 7), (2001, 1), (2001, 2)]:
-        q = (ss.join(dd.filter(E.and_(E.cmp("d_year", "==", year),
-                                      E.cmp("d_moy", "==", moy))),
+    for year, moy in [(1998, 11), (1998, 12), (1999, 11), (1999, 12),
+                      (2000, 6), (2000, 7), (2001, 1), (2001, 2)]:
+        q = (ss.join(dd.where((c.d_year == year) & (c.d_moy == moy)),
                      "ss_sold_date_sk", "d_date_sk")
              .join(it, "ss_item_sk", "i_item_sk")
-             .groupby("i_category_id")
+             .group_by("i_category_id")
              .agg(("rev", "sum", "ss_ext_sales_price")))
         qs.append(q)
 

@@ -7,8 +7,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np
 import pytest
 
-from repro.relational import (I32, STR, F32, Schema, Session, expr as E,
-                              make_storage)
+from repro.relational import (I32, STR, F32, Schema, Session,
+                              SessionConfig, expr as E, make_storage)
 
 
 @pytest.fixture(scope="session")
@@ -57,7 +57,8 @@ def hr_data():
 
 
 def build_session(hr_data, fmt="columnar", budget=1 << 26) -> Session:
-    sess = Session(budget_bytes=budget)
+    sess = Session.from_config(
+        SessionConfig.from_legacy_kwargs(budget_bytes=budget))
     for name, (schema, nrows, cols) in hr_data.items():
         st, _ = make_storage(name, schema, nrows, fmt, cols=cols)
         sess.register(st, columnar_for_stats=cols)

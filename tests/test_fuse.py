@@ -12,7 +12,8 @@ import pytest
 from conftest import build_session, hr_queries
 from repro.relational import (ExecContext, F32, FusedPipeline, I32, STR,
                               Schema, Session, execute, expr as E,
-                              fuse_plan, logical as L, make_storage)
+                              fuse_plan, logical as L, make_storage,
+                              SessionConfig)
 from repro.relational.datagen import generate_columns
 from repro.relational.rules import optimize_single
 from repro.relational.stats import (RelationalCostModel, StatsRegistry,
@@ -258,7 +259,8 @@ class TestSessionEndToEnd:
         S = Schema.of(("a", I32), ("b", I32), ("c", I32))
         cols = {c: rng.integers(0, 100, 2000).astype(np.int32)
                 for c in ("a", "b", "c")}
-        sess = Session(budget_bytes=1 << 24)
+        sess = Session.from_config(
+            SessionConfig.from_legacy_kwargs(budget_bytes=1 << 24))
         st, _ = make_storage("t", S, 2000, "columnar", cols=cols)
         sess.register(st)
         t = sess.table("t")
@@ -333,7 +335,8 @@ class TestReviewRegressions:
         sch = Schema.of(("v", I32))
         v1 = np.arange(nrows, dtype=np.int32)
         v2 = v1 + 10_000
-        sess = Session(budget_bytes=1 << 24)
+        sess = Session.from_config(
+            SessionConfig.from_legacy_kwargs(budget_bytes=1 << 24))
         st1, _ = make_storage("t", sch, nrows, "columnar", cols={"v": v1})
         sess.register(st1, columnar_for_stats={"v": v1})
         q = sess.table("t").filter(E.cmp("v", ">=", 0))

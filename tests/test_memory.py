@@ -18,7 +18,8 @@ import pytest
 
 from repro.core.memory import MemoryManager
 from repro.relational import (I32, Schema, Session, expr as E,
-                              make_storage)
+                              make_storage,
+                              SessionConfig)
 
 
 def _mk_manager(device=100, host=None, policy="lru"):
@@ -251,7 +252,8 @@ def _session(budget, policy="lru", nrows=4000, fmt="columnar",
     rng = np.random.default_rng(seed)
     cols = {c: rng.integers(0, 100, nrows).astype(np.int32)
             for c in ("a", "b", "c")}
-    sess = Session(budget_bytes=budget, policy=policy, **kw)
+    sess = Session.from_config(SessionConfig.from_legacy_kwargs(
+        budget_bytes=budget, policy=policy, **kw))
     st, _ = make_storage("t", S, nrows, fmt, cols=cols)
     sess.register(st, columnar_for_stats=cols)
     return sess

@@ -13,7 +13,8 @@ from hypothesis import HealthCheck, given, settings, strategies as st
 
 from conftest import build_session, hr_queries
 from repro.relational import (I32, STR, F32, Schema, Session, expr as E,
-                              logical as L, make_storage)
+                              logical as L, make_storage,
+                              SessionConfig)
 
 
 def _assert_batches_equal(base, opt):
@@ -153,7 +154,8 @@ def fuzz_session():
             ["c0", "c1", "c2", "c3"]}
     dim = {"d0": np.arange(nd, dtype=np.int32),
            "d1": rng.integers(0, 64, nd).astype(np.int32)}
-    sess = Session(budget_bytes=1 << 24)
+    sess = Session.from_config(
+        SessionConfig.from_legacy_kwargs(budget_bytes=1 << 24))
     st1, _ = make_storage("ft", _FUZZ_SCHEMA, n, "columnar", cols=fact)
     st2, _ = make_storage("dim", _DIM_SCHEMA, nd, "columnar", cols=dim)
     sess.register(st1)

@@ -6,7 +6,8 @@ import pytest
 from repro.core.fingerprint import fingerprint
 from repro.core.plan import walk
 from repro.relational import (ExecContext, I32, Schema, Session,
-                              expr as E, logical as L, make_storage)
+                              expr as E, logical as L, make_storage,
+                              SessionConfig)
 
 S = Schema.of(("a", I32), ("b", I32), ("c", I32))
 
@@ -16,7 +17,8 @@ def sess():
     rng = np.random.default_rng(9)
     cols = {c: rng.integers(0, 100, 2000).astype(np.int32)
             for c in ("a", "b", "c")}
-    s = Session(budget_bytes=1 << 24)
+    s = Session.from_config(
+        SessionConfig.from_legacy_kwargs(budget_bytes=1 << 24))
     st, _ = make_storage("t", S, 2000, "columnar", cols=cols)
     s.register(st)
     return s

@@ -20,7 +20,8 @@ def _mk_session(budget=1 << 24, nrows=2000, **kw) -> Session:
     rng = np.random.default_rng(9)
     cols = {c: rng.integers(0, 100, nrows).astype(np.int32)
             for c in ("a", "b", "c")}
-    sess = Session(budget_bytes=budget, **kw)
+    sess = Session.from_config(
+        SessionConfig.from_legacy_kwargs(budget_bytes=budget, **kw))
     st, _ = make_storage("t", S, nrows, "columnar", cols=cols)
     sess.register(st)
     return sess
@@ -426,8 +427,9 @@ class TestSortDeferredSync:
                 "b": np.arange(3000, dtype=np.int32)}
 
         def mk(fused):
-            s = Session(budget_bytes=1 << 24, fuse=fused,
-                        defer_sync=fused, use_scan_cache=fused)
+            s = Session.from_config(SessionConfig.from_legacy_kwargs(
+                budget_bytes=1 << 24, fuse=fused,
+                defer_sync=fused, use_scan_cache=fused))
             st, _ = make_storage("s", schema, 3000, "columnar", cols=cols)
             s.register(st)
             return s

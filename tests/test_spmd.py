@@ -113,7 +113,7 @@ class TestShardedRelational:
             import numpy as np, jax
             from jax.sharding import NamedSharding, PartitionSpec as P
             from repro.launch.mesh import make_test_mesh
-            from repro.relational import Session, expr as E, make_storage
+            from repro.relational import Session, SessionConfig, expr as E, make_storage
             from repro.relational.datagen import (generate_columns,
                 synthetic_schema)
 
@@ -122,10 +122,12 @@ class TestShardedRelational:
             mesh = make_test_mesh((8,), ("data",))
             sharding = NamedSharding(mesh, P("data"))
 
-            plain = Session(budget_bytes=1 << 24)
+            plain = Session.from_config(
+                SessionConfig.from_legacy_kwargs(budget_bytes=1 << 24))
             st, _ = make_storage("t", schema, 4096, "columnar", cols=cols)
             plain.register(st, columnar_for_stats=cols)
-            sharded = Session(budget_bytes=1 << 24, sharding=sharding)
+            sharded = Session.from_config(SessionConfig.from_legacy_kwargs(
+                budget_bytes=1 << 24, sharding=sharding))
             sharded.register(st, columnar_for_stats=cols)
 
             q = lambda s: [
