@@ -23,6 +23,10 @@ Prints ``name,us_per_call,derived`` CSV lines.
                           the selective dashboard: partial admission
                           under a sub-CE budget, warm partial
                           residency vs cold — PR 4)
+  bench_resilience        beyond-paper    (warm-stream throughput at a
+                          5% injected transient-fault rate vs the
+                          fault-free warm stream: isolation + retry
+                          overhead bounded — PR 6)
   bench_serving_prefix    beyond-paper    (LLM prefix-cache MQO)
   roofline_report         assignment      (dry-run roofline terms)
 
@@ -51,6 +55,7 @@ MODULES = [
     "bench_service",
     "bench_canonical",
     "bench_partition",
+    "bench_resilience",
     "bench_serving_prefix",
     "roofline_report",
 ]

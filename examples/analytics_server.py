@@ -15,6 +15,14 @@ section demonstrates the canonicalization contract: a builder-made
 query and a differently-spelled hand-built ``logical.Node`` tree of
 the same semantics land on the SAME covering expression.
 
+A resilience section (PR 6) then replays a dashboard window under
+deterministic fault injection: transient faults recover invisibly
+(retry / one rung down the degradation ladder, logged per attempt),
+while a query driven past ``max_attempts`` resolves its OWN handle to
+a ``QueryError`` — siblings complete, ``result()`` re-raises,
+``explain()`` carries the post-mortem, and the memory-pool audit stays
+clean.
+
     PYTHONPATH=src python examples/analytics_server.py \
         [--window 12] [--max-batch 4] [--passes 3]
 """
@@ -115,6 +123,59 @@ def main():
     print(f"\nmixed-spelling window: builder/variant/legacy CE keys "
           f"equal = {keys[0] == keys[1] == keys[2]} "
           f"(shared CE provenance: {sorted(keys[0])})")
+
+    # -- error handles and degradation reporting (PR 6) -----------------
+    # the same dashboard window on a session with deterministic fault
+    # injection: a seeded 10% transient rate at the kernel-launch and
+    # H2D points.  Transient faults recover invisibly — retried in
+    # place or one rung down the Pallas → fused-XLA → eager ladder —
+    # and every step lands in the window report.
+    from repro.core.faults import FaultConfig
+    from repro.relational import MemoryConfig, SessionConfig
+
+    fcfg = (SessionConfig(memory=MemoryConfig(budget_bytes=1 << 30))
+            .with_faults(FaultConfig(seed=args.seed, rates={
+                "kernel_launch": 0.10, "scan_h2d": 0.10})))
+    fsess = build_tpcds_session(scale_rows=args.scale_rows, config=fcfg)
+    fsvc = QueryService(fsess, max_batch=args.max_batch)
+    fhandles = [fsvc.submit(q) for q in tpcds_queries(fsess)[10:14]]
+    fsvc.flush()
+    rep = fsess.fault_injector.report()
+    print(f"\nfaulted window: {rep['n_fired']} faults fired "
+          f"{rep['fired']}, "
+          f"failed handles: {sum(h.failed for h in fhandles)}/4 "
+          f"(transient faults recover without failing queries)")
+
+    # drive one query past max_attempts: a scheduled fault kills the
+    # first query's first two H2D transfers (attempts 1 and 2), so its
+    # handle resolves to a QueryError — the window's other query, whose
+    # transfers draw later schedule indices, is untouched
+    hard = (SessionConfig(memory=MemoryConfig(budget_bytes=1 << 30))
+            .with_resilience(max_attempts=2)
+            .with_faults(FaultConfig(seed=args.seed,
+                                     schedule={"scan_h2d": (0, 1)})))
+    hsess = build_tpcds_session(scale_rows=args.scale_rows, config=hard)
+    hsvc = QueryService(hsess, max_batch=2)
+    h_doomed = hsvc.submit(hsess.table("store_sales")
+                           .where(c.ss_sales_price > 60.0)
+                           .select("ss_item_sk"))
+    h_fine = hsvc.submit(hsess.table("store_sales")
+                         .where(c.ss_quantity >= 20)
+                         .select("ss_item_sk"))
+    hsvc.flush()
+    err = h_doomed.error
+    ex = h_doomed.explain()
+    print(f"doomed handle: failed={h_doomed.failed} after "
+          f"{err.attempts} attempts — {err.exception!r}")
+    print("  attempt log:",
+          [f"{e['action']}->{e['level']}" for e in ex["events"]])
+    try:
+        h_doomed.result()
+    except Exception as exc:
+        print(f"  result() re-raises: {type(exc).__name__}")
+    print(f"sibling handle unaffected: "
+          f"{h_fine.result().nrows} rows; "
+          f"memory audit clean = {hsess.memory.audit() == []}")
 
 
 if __name__ == "__main__":

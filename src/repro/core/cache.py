@@ -19,7 +19,7 @@ memory hierarchy used by ``relational.Session`` and
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Optional
+from typing import Any, Callable, List, Optional
 
 from .memory import MemoryEntry, MemoryManager, MemoryPool, PoolStats
 
@@ -27,6 +27,60 @@ from .memory import MemoryEntry, MemoryManager, MemoryPool, PoolStats
 # unified memory subsystem.
 CacheEntry = MemoryEntry
 CacheStats = PoolStats
+
+
+class CacheTransaction:
+    """All-or-nothing multi-entry admission (PR 6).
+
+    A partition-grained CE materializes as several ``(ψ, pid)`` entries;
+    a fault part-way through must not leave the earlier partitions
+    charged against the pool budget while the CE as a whole is unusable.
+    Used as a context manager the transaction rolls back every entry it
+    admitted when the block raises, and commits (keeps them) otherwise::
+
+        with cache.transaction() as txn:
+            for pid in pids:
+                txn.put((psi, pid), tbl, nbytes)
+
+    Rollback evicts through the manager's normal path, so the journal
+    records the reversal and ``audit()`` stays clean either way.
+    """
+
+    def __init__(self, cache: "CacheManager"):
+        self._cache = cache
+        self._keys: List[Any] = []
+        self.rolled_back = False
+
+    def put(self, psi, payload: Any, nbytes: int,
+            est_bytes: int = 0, benefit: float = 0.0) -> MemoryEntry:
+        entry = self._cache.put(psi, payload, nbytes=nbytes,
+                                est_bytes=est_bytes, benefit=benefit)
+        self._keys.append(psi)
+        return entry
+
+    def rollback(self) -> int:
+        """Evict every entry admitted by this transaction; returns how
+        many were reversed."""
+        n = 0
+        for key in self._keys:
+            self._cache.evict(key)
+            n += 1
+        self._keys.clear()
+        self.rolled_back = True
+        return n
+
+    def commit(self) -> None:
+        self._keys.clear()
+
+    def __enter__(self) -> "CacheTransaction":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        if exc_type is not None:
+            self.rollback()
+        else:
+            self.commit()
+        return False                 # never swallow the exception
 
 
 class CacheManager:
@@ -81,6 +135,11 @@ class CacheManager:
         fingerprints, partition-grained entries are ``(strict, pid)``
         tuples (see relational.partition)."""
         return self._pool.keys()
+
+    def transaction(self) -> CacheTransaction:
+        """Open an all-or-nothing admission scope (see
+        :class:`CacheTransaction`)."""
+        return CacheTransaction(self)
 
     # -- maintenance ---------------------------------------------------------
     def evict(self, psi: bytes) -> None:

@@ -43,16 +43,36 @@ Invariants (property-tested in ``tests/test_memory.py``):
 Dropping or spilling never changes results — every consumer treats a
 miss as "recompute from the retained plan" — so batches are
 bit-identical under a pathologically tiny budget and an unlimited one.
+
+**Failure model (PR 6).**  Admissions, spills and evictions are
+journaled two-phase operations: a :class:`Journal` record opens before
+the books are touched and commits after — an exception escaping
+mid-operation leaves an open record that :meth:`MemoryManager.audit`
+flags instead of silently corrupting ``used`` counters.  ``audit()``
+re-derives every invariant from the entries actually present
+(``used ≤ budget``, tier bookkeeping matches residency, no orphaned or
+transient-tier entries) and returns the violations;
+:meth:`MemoryManager.reconcile` *quarantines-then-drops* inconsistent
+entries and recomputes the books from the survivors, so a corrupt
+entry is never served.  ``get`` applies the same guard inline: an
+entry in an impossible state is quarantined and reported as a miss.
+A spill that fails (the ``spill_to_host`` fault point, or a raising
+``spill_fn``) degrades to a drop — the victim's consumers recompute,
+results are unchanged, and the books stay exact.
 """
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterable, List, Optional
 
 POLICIES = ("lru", "benefit", "admission")
 
 DEVICE, HOST, DROPPED = "device", "host", "dropped"
+# transient tier label used inside _make_room while a victim is between
+# tiers; must never be observable between operations (audit flags it)
+EVICTING = "evicting"
 
 
 @dataclass
@@ -78,6 +98,48 @@ class MemoryEntry:
 
 
 @dataclass
+class JournalRecord:
+    """One two-phase pool operation: opened before the books move,
+    committed after.  An open record surviving past its operation means
+    the op died mid-flight — ``audit()`` reports it, ``reconcile()``
+    closes it after repairing the books."""
+
+    seq: int
+    op: str                       # "put" | "evict" | "promote" | ...
+    pool: str
+    key: Any
+    committed: bool = False
+    note: str = ""
+
+
+class Journal:
+    """Bounded journal of pool operations (ring buffer — telemetry and
+    crash detection, not a redo log; the books themselves are repaired
+    by recomputation from entries in ``reconcile``)."""
+
+    def __init__(self, maxlen: int = 512):
+        self.records: deque = deque(maxlen=maxlen)
+        self._open: Dict[int, JournalRecord] = {}
+        self._seq = 0
+
+    def begin(self, op: str, pool: str, key: Any) -> JournalRecord:
+        self._seq += 1
+        rec = JournalRecord(seq=self._seq, op=op, pool=pool, key=key)
+        self.records.append(rec)
+        self._open[rec.seq] = rec
+        return rec
+
+    def commit(self, rec: JournalRecord, note: str = "") -> None:
+        rec.committed = True
+        if note:
+            rec.note = note
+        self._open.pop(rec.seq, None)
+
+    def open_records(self) -> List[JournalRecord]:
+        return list(self._open.values())
+
+
+@dataclass
 class PoolStats:
     """Per-pool accounting (field names match the old CacheStats)."""
 
@@ -90,13 +152,15 @@ class PoolStats:
     evictions: int = 0
     drops: int = 0
     promotions: int = 0
+    spill_failures: int = 0       # spills downgraded to drops
 
     def as_dict(self) -> dict:
         return dict(budget=self.budget, used=self.used,
                     spilled_bytes=self.spilled_bytes,
                     admissions=self.admissions, hits=self.hits,
                     misses=self.misses, evictions=self.evictions,
-                    drops=self.drops, promotions=self.promotions)
+                    drops=self.drops, promotions=self.promotions,
+                    spill_failures=self.spill_failures)
 
 
 class MemoryPool:
@@ -195,6 +259,11 @@ class MemoryManager:
         self.device_used = 0
         self.host_used = 0
         self._seq = 0
+        self.journal = Journal()
+        # optional core.faults.FaultInjector (the "spill_to_host" point);
+        # installed by the owning Session when fault injection is on
+        self.faults = None
+        self.quarantined = 0      # entries dropped by the serving guard
 
     # -- pool registry -------------------------------------------------------
     def pool(self, name: str, *,
@@ -214,6 +283,7 @@ class MemoryManager:
     def put(self, pool: MemoryPool, key, payload, nbytes: int,
             est_bytes: int = 0, benefit: float = 0.0) -> MemoryEntry:
         nbytes = int(nbytes)
+        rec = self.journal.begin("put", pool.name, key)
         if key in pool.entries:          # re-put invalidates the old entry
             self.evict(pool, key)
         self._seq += 1
@@ -239,12 +309,21 @@ class MemoryManager:
             self._demote(pool, entry)
             if entry.tier != DROPPED:
                 pool.entries[key] = entry
+        self.journal.commit(rec, note=entry.tier)
         return entry
 
     # -- lookup --------------------------------------------------------------
     def get(self, pool: MemoryPool, key, default=None):
         entry = pool.entries.get(key)
         if entry is None:
+            pool.stats.misses += 1
+            return default
+        if entry.tier not in (DEVICE, HOST) or entry.payload is None:
+            # serving guard: an entry stranded in an impossible state
+            # (a crashed mid-operation) must not be served — quarantine
+            # it (drop + repair the books) and report a miss so the
+            # caller recomputes from the retained plan
+            self._quarantine(pool, entry)
             pool.stats.misses += 1
             return default
         self._seq += 1
@@ -262,6 +341,7 @@ class MemoryManager:
             return entry.payload
         payload = pool.unspill_fn(entry.payload)
         if self.device_used + entry.nbytes <= self.device_budget:
+            rec = self.journal.begin("promote", pool.name, key)
             entry.payload = payload
             entry.tier = DEVICE
             self.host_used -= entry.nbytes
@@ -269,6 +349,7 @@ class MemoryManager:
             pool.stats.spilled_bytes -= entry.nbytes
             pool.stats.used += entry.nbytes
             pool.stats.promotions += 1
+            self.journal.commit(rec)
         return payload
 
     # -- maintenance ---------------------------------------------------------
@@ -276,8 +357,11 @@ class MemoryManager:
         entry = pool.entries.pop(key, None)
         if entry is None:
             return
+        rec = self.journal.begin("evict", pool.name, key)
         self._release(pool, entry)
         entry.tier = DROPPED
+        entry.payload = None
+        self.journal.commit(rec)
 
     def clear(self) -> None:
         for p in self.pools.values():
@@ -286,6 +370,127 @@ class MemoryManager:
     @property
     def device_headroom(self) -> int:
         return max(0, self.device_budget - self.device_used)
+
+    # -- self-audit ----------------------------------------------------------
+    def audit(self) -> List[str]:
+        """Verify every pool invariant from first principles and return
+        the violations (empty list == clean).  Checks, per pool and for
+        the manager totals:
+
+        * ``used ≤ budget`` on both tiers;
+        * tier bookkeeping matches actual residency (``stats.used`` ==
+          Σ nbytes of entries actually on the device tier, ditto host);
+        * no orphaned buffers (an entry on a live tier with a ``None``
+          payload) and no entries stranded on a transient tier
+          (``evicting`` / ``dropped`` ghosts left in the key map);
+        * no journal record still open (a crashed mid-operation).
+        """
+        v: List[str] = []
+        dev_total = host_total = 0
+        for name, pool in self.pools.items():
+            dev = host = 0
+            for e in pool.entries.values():
+                if e.tier == DEVICE:
+                    dev += e.nbytes
+                elif e.tier == HOST:
+                    host += e.nbytes
+                else:
+                    v.append(f"{name}: entry {_short_key(e.key)} stranded"
+                             f" on transient tier {e.tier!r}")
+                if e.tier in (DEVICE, HOST) and e.payload is None:
+                    v.append(f"{name}: orphaned {e.tier} buffer for "
+                             f"{_short_key(e.key)} (payload is None)")
+            if dev != pool.stats.used:
+                v.append(f"{name}: device books {pool.stats.used} != "
+                         f"actual residency {dev}")
+            if host != pool.stats.spilled_bytes:
+                v.append(f"{name}: host books {pool.stats.spilled_bytes}"
+                         f" != actual residency {host}")
+            dev_total += dev
+            host_total += host
+        if dev_total != self.device_used:
+            v.append(f"manager: device_used {self.device_used} != "
+                     f"Σ pool residency {dev_total}")
+        if host_total != self.host_used:
+            v.append(f"manager: host_used {self.host_used} != "
+                     f"Σ pool residency {host_total}")
+        if self.device_used > self.device_budget:
+            v.append(f"manager: device_used {self.device_used} > "
+                     f"budget {self.device_budget}")
+        if (self.host_budget is not None
+                and self.host_used > self.host_budget):
+            v.append(f"manager: host_used {self.host_used} > "
+                     f"host budget {self.host_budget}")
+        for rec in self.journal.open_records():
+            v.append(f"journal: {rec.op} on {rec.pool}/"
+                     f"{_short_key(rec.key)} (seq {rec.seq}) never "
+                     f"committed — operation died mid-flight")
+        return v
+
+    def reconcile(self) -> dict:
+        """Repair after a failed operation: quarantine-then-drop every
+        entry in an inconsistent state (transient tier, orphaned
+        payload), recompute the books from the surviving entries, and
+        close crashed journal records.  Returns a report of what was
+        repaired; ``audit()`` is clean afterwards by construction —
+        quarantined content is recomputed by its consumers, never
+        served."""
+        quarantined: List[str] = []
+        for name, pool in self.pools.items():
+            bad = [e for e in pool.entries.values()
+                   if e.tier not in (DEVICE, HOST) or e.payload is None]
+            for e in bad:
+                pool.entries.pop(e.key, None)
+                e.tier = DROPPED
+                e.payload = None
+                quarantined.append(f"{name}/{_short_key(e.key)}")
+            self.quarantined += len(bad)
+        # recompute every book from actual residency
+        corrections = 0
+        dev_total = host_total = 0
+        for pool in self.pools.values():
+            dev = sum(e.nbytes for e in pool.entries.values()
+                      if e.tier == DEVICE)
+            host = sum(e.nbytes for e in pool.entries.values()
+                       if e.tier == HOST)
+            corrections += (dev != pool.stats.used)
+            corrections += (host != pool.stats.spilled_bytes)
+            pool.stats.used = dev
+            pool.stats.spilled_bytes = host
+            dev_total += dev
+            host_total += host
+        corrections += (dev_total != self.device_used)
+        corrections += (host_total != self.host_used)
+        self.device_used = dev_total
+        self.host_used = host_total
+        crashed = self.journal.open_records()
+        for rec in crashed:
+            self.journal.commit(rec, note="closed by reconcile")
+        # a recomputation cannot shrink usage below the budget if the
+        # surviving residency genuinely exceeds it — evict down to the
+        # budget through the normal victim path in that case
+        if self.device_used > self.device_budget:
+            self._make_room(0)
+        return {
+            "quarantined": quarantined,
+            "corrections": int(corrections),
+            "crashed_ops": len(crashed),
+        }
+
+    def _quarantine(self, pool: MemoryPool, entry: MemoryEntry) -> None:
+        """Serving-side guard: remove a corrupt entry and repair the
+        books it may have skewed (used by ``get`` before it would have
+        served the entry)."""
+        pool.entries.pop(entry.key, None)
+        if entry.tier == DEVICE:
+            self.device_used -= entry.nbytes
+            pool.stats.used -= entry.nbytes
+        elif entry.tier == HOST:
+            self.host_used -= entry.nbytes
+            pool.stats.spilled_bytes -= entry.nbytes
+        entry.tier = DROPPED
+        entry.payload = None
+        self.quarantined += 1
 
     def report(self) -> dict:
         return {
@@ -364,16 +569,30 @@ class MemoryManager:
 
     def _demote(self, pool: MemoryPool, entry: MemoryEntry) -> None:
         """Tier 2/3 of the spill path: host when the pool can spill and
-        the host budget allows, else drop."""
+        the host budget allows, else drop.  A spill that fails — the
+        ``spill_to_host`` fault point or a raising ``spill_fn`` — is
+        DOWNGRADED to a drop instead of escaping: the victim's consumers
+        recompute from the retained plan (results unchanged) and the
+        books never see a half-spilled entry."""
         if pool.spill_fn is not None:
             self._make_host_room(entry.nbytes)
             if (self.host_budget is None
                     or self.host_used + entry.nbytes <= self.host_budget):
-                entry.payload = pool.spill_fn(entry.payload)
-                entry.tier = HOST
-                self.host_used += entry.nbytes
-                pool.stats.spilled_bytes += entry.nbytes
-                return
+                rec = self.journal.begin("spill", pool.name, entry.key)
+                try:
+                    if self.faults is not None:
+                        self.faults.check("spill_to_host", key=entry.key)
+                    payload = pool.spill_fn(entry.payload)
+                except Exception as exc:   # incl. InjectedFault
+                    pool.stats.spill_failures += 1
+                    self.journal.commit(rec, note=f"failed: {exc!r}")
+                else:
+                    entry.payload = payload
+                    entry.tier = HOST
+                    self.host_used += entry.nbytes
+                    pool.stats.spilled_bytes += entry.nbytes
+                    self.journal.commit(rec)
+                    return
         entry.payload = None
         entry.tier = DROPPED
         pool.stats.drops += 1

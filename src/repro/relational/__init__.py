@@ -11,15 +11,17 @@ from .canonical import (FALSE, canonicalize_expr, canonicalize_plan,
 from .datagen import (generate_columns, make_storage, people_schema,
                       synthetic_schema)
 from .executor import BatchResult, QueryResult, Session
-from .fuse import FusedPipeline, fuse_plan
+from .fuse import FusedPipeline, fuse_plan, unfuse_plan
 from .partition import (CePartition, PartitionInfo, PartitionedCePlan,
                         Partitioning, make_ce_partitioner, partition_table,
                         prune_parts)
-from .physical import ExecContext, ExecMetrics, TableStorage, execute
+from .physical import (CEMaterializationError, ExecContext, ExecMetrics,
+                       TableStorage, execute)
 from .rewriter import RelationalRewriter, make_ce_transform
 from .rules import optimize_single
 from .schema import F32, I32, STR, ColType, Schema, Table, next_pow2
 from .service import (ExecutionConfig, MemoryConfig, MqoConfig,
-                      QueryHandle, QueryService, SessionConfig)
+                      QueryError, QueryHandle, QueryService,
+                      ResilienceConfig, SessionConfig)
 from .stats import (RelationalCostModel, StatsRegistry, build_table_stats,
                     required_columns, selectivity)

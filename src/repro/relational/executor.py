@@ -28,10 +28,12 @@ import jax
 import numpy as np
 
 from ..core.cache import CacheManager
+from ..core.faults import (DegradationEvent, FaultInjector, InjectedFault)
 from ..core.memory import DEVICE, MemoryManager
 from ..core.optimizer import OptimizedBatch
 from . import logical as L
 from .partition import Partitioning, partition_table
+from .fuse import unfuse_plan
 from .physical import ExecContext, ExecMetrics, TableStorage, execute
 from .rules import optimize_single
 from .schema import Table
@@ -50,16 +52,28 @@ class QueryResult:
 
 @dataclass
 class BatchResult:
-    results: List[QueryResult]
+    # one slot per submitted query, submission order; a slot is None
+    # when that query failed (its handle carries the QueryError) —
+    # fault-free windows never contain None
+    results: List[Optional[QueryResult]]
     total_seconds: float
     optimize_seconds: float = 0.0
     mqo: Optional[OptimizedBatch] = None
     cache_report: dict = field(default_factory=dict)
     metrics: Optional[ExecMetrics] = None
+    # window resilience report (PR 6): degradation/retry events,
+    # n_failed, fault-injector telemetry, post-window audit — empty
+    # when the window saw no failures and no injector is configured
+    resilience: dict = field(default_factory=dict)
 
     @property
-    def per_query_seconds(self) -> List[float]:
-        return [r.seconds for r in self.results]
+    def per_query_seconds(self) -> List[Optional[float]]:
+        return [r.seconds if r is not None else None
+                for r in self.results]
+
+    @property
+    def n_failed(self) -> int:
+        return sum(1 for r in self.results if r is None)
 
 
 def _spill_to_host(table: Table) -> Table:
@@ -186,6 +200,17 @@ class Session:
         self._resident_index: Dict[bytes, bytes] = {}
         # lazily-created QueryService backing the one-shot run_batch
         self._oneshot: Optional[QueryService] = None
+        # -- resilience (PR 6, ROADMAP "Failure semantics") ----------------
+        # fault_injector is None unless config.resilience.faults enables
+        # the harness; the memory manager shares it (spill_to_host
+        # point) and ExecContext.from_exec_config picks it up from the
+        # mirrored attribute below.  _sleep is the backoff clock,
+        # injectable so retry tests never wall-sleep.
+        self.resilience = config.resilience
+        self.fault_injector = FaultInjector.from_config(
+            config.resilience.faults)
+        self.memory.faults = self.fault_injector
+        self._sleep = time.sleep
 
     @classmethod
     def from_config(cls, config: SessionConfig) -> "Session":
@@ -309,6 +334,90 @@ class Session:
         table = execute(plan, ctx)
         jax.block_until_ready(list(table.columns.values()))
         return QueryResult(table, time.perf_counter() - t0, plan)
+
+    # -- graceful degradation (PR 6) ----------------------------------------
+    # route overrides per ladder rung: Pallas kernel → fused-XLA →
+    # eager per-operator.  The eager rung also turns off deferred sync,
+    # so estimate-overflow/OOM pressure ends at per-operator exact
+    # sizing; the kernel_launch fault point is only checked on fused
+    # dispatch, so the bottom rung cannot re-fire it.
+    _LADDER = (
+        ("pallas", {}),
+        ("fused-xla", dict(use_pallas_filter=False)),
+        ("eager", dict(use_pallas_filter=False, fuse=False,
+                       defer_sync=False)),
+    )
+
+    def _backoff(self, attempt: int) -> None:
+        """Exponential backoff before retry ``attempt+1`` (attempt is
+        1-based); base 0 disables sleeping, ``self._sleep`` is
+        injectable for deterministic tests."""
+        res = self.resilience
+        base = float(res.backoff_base_s)
+        if base > 0.0:
+            self._sleep(base * res.backoff_multiplier ** (attempt - 1))
+
+    def run_one_resilient(self, plan: L.Node, ctx: ExecContext, *,
+                          query: int = 0,
+                          events: Optional[list] = None) -> QueryResult:
+        """``run_one`` under the degradation ladder: transient faults
+        retry in place (a fresh draw from the seeded stream), kernel
+        dispatch failures step the route down one rung, attempts are
+        bounded by ``resilience.max_attempts`` with exponential backoff
+        between them.  Every step is logged into ``events`` (the window
+        report / failed-handle explain).  ``CEMaterializationError``
+        propagates untouched — the service handles it by rerunning the
+        consumer on its unshared residual plan."""
+        from dataclasses import replace as _dc_replace
+
+        from .physical import CEMaterializationError
+
+        res = self.resilience
+        if res is None or not res.degrade:
+            return self.run_one(plan, ctx)
+        events = events if events is not None else []
+        # start at the rung the context is actually configured for, so
+        # "degrade one level" always changes something
+        level = 0
+        if not ctx.use_pallas_filter:
+            level = 1
+            if not ctx.fuse and not ctx.defer_sync:
+                level = 2
+        max_attempts = max(1, int(res.max_attempts))
+        last_exc: Optional[BaseException] = None
+        for attempt in range(1, max_attempts + 1):
+            name, over = self._LADDER[level]
+            cur = _dc_replace(ctx, **over) if over else ctx
+            # the bottom rung must run per-operator even when the plan
+            # arrived pre-fused (the rewriter fuses residuals itself)
+            cur_plan = unfuse_plan(plan) if name == "eager" else plan
+            try:
+                return self.run_one(cur_plan, cur)
+            except CEMaterializationError:
+                raise
+            except Exception as exc:
+                last_exc = exc
+                transient = (isinstance(exc, InjectedFault)
+                             and exc.point != "kernel_launch")
+                if transient:
+                    # e.g. a failed H2D transfer: the operation is
+                    # expected to succeed on a later attempt — same rung
+                    action = "retry"
+                elif level + 1 < len(self._LADDER):
+                    action = "degrade"
+                    level += 1
+                else:
+                    # eager bottom rung failed on a real error: done
+                    events.append(DegradationEvent(
+                        query=query, attempt=attempt, action="give-up",
+                        level=name, error=repr(exc)))
+                    raise
+                events.append(DegradationEvent(
+                    query=query, attempt=attempt, action=action,
+                    level=self._LADDER[level][0], error=repr(exc)))
+                if attempt < max_attempts:
+                    self._backoff(attempt)
+        raise last_exc
 
     def run_batch(
         self,

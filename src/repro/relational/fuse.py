@@ -128,3 +128,23 @@ def fuse_plan(root: L.Node) -> L.Node:
     if all(nc is c for nc, c in zip(new_children, root.children)):
         return root
     return root.with_children(new_children)
+
+
+def unfuse_plan(root: L.Node) -> L.Node:
+    """Inverse of :func:`fuse_plan`: expand every FusedPipeline back
+    into the equivalent eager Filter→Project chain.  The degradation
+    ladder's bottom rung (``relational.executor``) runs pre-fused plans
+    through this so single-dispatch kernel launches are genuinely off
+    the path, not just disabled for future fusion."""
+    root = L.as_node(root)
+    if isinstance(root, FusedPipeline):
+        node: L.Node = unfuse_plan(root.source)
+        if not isinstance(root.pred, E.TrueExpr):
+            node = L.Filter(child=node, pred=root.pred)
+        return L.Project(child=node, cols=root.cols)
+    if not root.children:
+        return root
+    new_children = tuple(unfuse_plan(c) for c in root.children)
+    if all(nc is c for nc, c in zip(new_children, root.children)):
+        return root
+    return root.with_children(new_children)

@@ -48,6 +48,22 @@ from .schema import Schema, Table, empty_like, next_pow2
 
 I32_SENTINEL = np.int32(2**31 - 1)
 
+
+class CEMaterializationError(RuntimeError):
+    """A shared covering relation failed to materialize.  Raised to
+    every consumer of the poisoned ψ (the first failure marks it in
+    ``ctx.failed_ces``) so the service can rerun each consumer on its
+    unshared residual plan instead of letting one bad CE take down the
+    whole window."""
+
+    def __init__(self, psi: bytes, cause: Optional[BaseException] = None):
+        self.psi = psi
+        self.cause = cause
+        why = f": {cause!r}" if cause is not None else ""
+        super().__init__(
+            f"covering relation ψ={psi.hex()[:12]} failed to "
+            f"materialize{why}")
+
 # deferred-sync capacity estimates get this much slack before the
 # overflow-recompact path triggers (estimation error is one-sided cheap:
 # undershoot costs a recompact, overshoot only pads the output)
@@ -143,6 +159,17 @@ class ExecContext:
     # instead of holding unbounded device bytes the MCKP rejected.
     ce_part_memo: Dict[tuple, "Table"] = field(default_factory=dict)
     ce_part_memo_bytes: int = 0
+    # optional core.faults.FaultInjector — the scan_h2d / kernel_launch /
+    # ce_admission points fire through ctx.check_fault(...)
+    faults: Optional[object] = None
+    # strict keys of CEs whose materialization failed this window:
+    # consumers of a poisoned CE fail fast (CEMaterializationError) so
+    # the service can rerun them on their unshared residual plans
+    failed_ces: set = field(default_factory=set)
+
+    def check_fault(self, point: str, key=None) -> None:
+        if self.faults is not None:
+            self.faults.check(point, key=key)
 
     def _memo_put(self, key: tuple, table: "Table") -> bool:
         allowance = float("inf")
@@ -190,7 +217,8 @@ class ExecContext:
             defer_sync=cfg.defer_sync,
             prune=getattr(cfg, "prune", True),
             cost_model=cost_model,
-            scan_cache=scan_cache)
+            scan_cache=scan_cache,
+            faults=getattr(cfg, "fault_injector", None))
 
 
 # ---------------------------------------------------------------------------
@@ -318,6 +346,7 @@ def _agg_seg_ids(nrows, *keys):
 # operator implementations
 # ---------------------------------------------------------------------------
 def _device_put(arr: np.ndarray, ctx: ExecContext) -> jnp.ndarray:
+    ctx.check_fault("scan_h2d")
     if ctx.disk_latency_per_byte:
         time.sleep(arr.nbytes * ctx.disk_latency_per_byte)
     if ctx.sharding is not None and arr.ndim >= 1:
@@ -955,6 +984,9 @@ def _fused_fn(key, pred: E.Expr, in_names: Tuple[str, ...],
 
 
 def _exec_fused(node: FusedPipeline, ctx: ExecContext) -> Table:
+    # covers the Pallas and fused-XLA routes; the eager per-operator
+    # path (the degradation ladder's bottom rung) never dispatches here
+    ctx.check_fault("kernel_launch")
     src, pred = node.source, node.pred
     need = set(node.cols) | E.columns_of(pred)
     est_rows = None
@@ -1140,7 +1172,10 @@ def _partitioned_ce_table(psi: bytes, ctx: ExecContext) -> Table:
     from the cache, cold partitions re-run the covering plan restricted
     to that partition (admitted ones are materialized as they compute).
     Composition order is ascending partition id — the same order an
-    unpartitioned materialization would produce."""
+    unpartitioned materialization would produce.  Admissions run inside
+    one cache transaction: a failure part-way through the partition
+    loop rolls back the partitions this call already admitted, so the
+    pool budget never leaks on a partial multi-entry admission."""
     composed = ctx.ce_part_memo.get((psi, "composed"))
     if composed is not None:
         # one composition per window: every consumer reads the same
@@ -1148,28 +1183,37 @@ def _partitioned_ce_table(psi: bytes, ctx: ExecContext) -> Table:
         return composed
     pp = ctx.partitioned_ces[psi]
     pieces = []
-    for pid in pp.live:
-        cached = ctx.cache.get((psi, pid)) if ctx.cache is not None \
-            else None
-        if cached is not None:
-            ctx.metrics.bytes_cached_read += cached.nbytes
-            pieces.append(cached)
-            continue
-        memo = ctx.ce_part_memo.get((psi, pid))
-        if memo is not None:
-            pieces.append(memo)
-            continue
-        plan = restrict_to_parts(pp.plan, (pid,))
-        if ctx.fuse:
-            plan = fuse_plan(plan)
-        t = _exec(plan, ctx, required_columns_of(plan))
-        if ctx.cache is not None and pid in pp.admitted:
-            ctx.cache.put((psi, pid), t, nbytes=t.nbytes,
-                          est_bytes=t.logical_nbytes,
-                          benefit=pp.benefits.get(pid, 0.0))
-        else:
-            ctx._memo_put((psi, pid), t)
-        pieces.append(t)
+    txn = ctx.cache.transaction() if ctx.cache is not None else None
+    try:
+        for pid in pp.live:
+            cached = ctx.cache.get((psi, pid)) if ctx.cache is not None \
+                else None
+            if cached is not None:
+                ctx.metrics.bytes_cached_read += cached.nbytes
+                pieces.append(cached)
+                continue
+            memo = ctx.ce_part_memo.get((psi, pid))
+            if memo is not None:
+                pieces.append(memo)
+                continue
+            plan = restrict_to_parts(pp.plan, (pid,))
+            if ctx.fuse:
+                plan = fuse_plan(plan)
+            t = _exec(plan, ctx, required_columns_of(plan))
+            if txn is not None and pid in pp.admitted:
+                ctx.check_fault("ce_admission", key=(psi, pid))
+                txn.put((psi, pid), t, nbytes=t.nbytes,
+                        est_bytes=t.logical_nbytes,
+                        benefit=pp.benefits.get(pid, 0.0))
+            else:
+                ctx._memo_put((psi, pid), t)
+            pieces.append(t)
+    except Exception:
+        if txn is not None:
+            txn.rollback()
+        raise
+    if txn is not None:
+        txn.commit()
     out = _concat_tables(pp.plan.schema, pieces)
     # prefer memoizing the composed table (later reads are then free);
     # it subsumes the per-partition entries, so release those on
@@ -1195,12 +1239,21 @@ def _materialize_cache(node: L.Cache, ctx: ExecContext, req) -> Table:
         # can be admitted whole in one window and per-partition in the
         # next — the already-materialized bytes must not be recomputed
         return existing
-    if node.psi in ctx.partitioned_ces:
-        return _partitioned_ce_table(node.psi, ctx)
-    table = _exec(node.child, ctx, req)
-    ctx.cache.put(node.psi, table, nbytes=table.nbytes,
-                  est_bytes=table.logical_nbytes,
-                  benefit=ctx.cache_values.get(node.psi, 0.0))
+    if node.psi in ctx.failed_ces:
+        raise CEMaterializationError(node.psi)
+    try:
+        if node.psi in ctx.partitioned_ces:
+            return _partitioned_ce_table(node.psi, ctx)
+        table = _exec(node.child, ctx, req)
+        ctx.check_fault("ce_admission", key=node.psi)
+        ctx.cache.put(node.psi, table, nbytes=table.nbytes,
+                      est_bytes=table.logical_nbytes,
+                      benefit=ctx.cache_values.get(node.psi, 0.0))
+    except CEMaterializationError:
+        raise
+    except Exception as exc:
+        ctx.failed_ces.add(node.psi)
+        raise CEMaterializationError(node.psi, exc) from exc
     return table
 
 
@@ -1214,15 +1267,26 @@ def _cached_scan_table(node: L.CachedScan, ctx: ExecContext) -> Table:
         # the CE as partition-grained (see _materialize_cache)
         ctx.metrics.bytes_cached_read += table.nbytes
         return table
-    if node.psi in ctx.partitioned_ces:
-        return _partitioned_ce_table(node.psi, ctx)
-    plan = ctx.cache_plans.get(node.psi)
-    if plan is None:
-        raise KeyError(f"no cache plan registered for ψ="
-                       f"{node.psi.hex()[:12]}")
-    if ctx.fuse:
-        plan = fuse_plan(plan)
-    return _exec(plan, ctx, required_columns_of(plan))
+    if node.psi in ctx.failed_ces:
+        # poisoned earlier this window: fail fast so the service reruns
+        # this consumer on its residual plan instead of recomputing the
+        # covering union inline
+        raise CEMaterializationError(node.psi)
+    try:
+        if node.psi in ctx.partitioned_ces:
+            return _partitioned_ce_table(node.psi, ctx)
+        plan = ctx.cache_plans.get(node.psi)
+        if plan is None:
+            raise KeyError(f"no cache plan registered for ψ="
+                           f"{node.psi.hex()[:12]}")
+        if ctx.fuse:
+            plan = fuse_plan(plan)
+        return _exec(plan, ctx, required_columns_of(plan))
+    except CEMaterializationError:
+        raise
+    except Exception as exc:
+        ctx.failed_ces.add(node.psi)
+        raise CEMaterializationError(node.psi, exc) from exc
 
 
 def _exec_cached_scan(node: L.CachedScan, ctx: ExecContext, req) -> Table:

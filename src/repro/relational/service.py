@@ -52,6 +52,7 @@ import warnings
 from dataclasses import dataclass, field, replace
 from typing import Any, Dict, List, Optional, Sequence, Set
 
+from ..core.faults import DegradationEvent, InjectedFault
 from ..core.fingerprint import fingerprint_set
 from ..core.optimizer import MultiQueryOptimizer
 from . import logical as L
@@ -132,6 +133,42 @@ class MqoConfig:
 
 
 @dataclass(frozen=True)
+class ResilienceConfig:
+    """Failure-handling knobs (ROADMAP "Failure semantics").
+
+    * ``isolate`` — per-query fault isolation: a failing query resolves
+      its own handle to a :class:`QueryError` while siblings in the
+      window complete; off, the first failure aborts the window (every
+      handle still resolves — to the same error).
+    * ``degrade`` — the execution ladder: Pallas kernel route →
+      fused-XLA → eager per-operator; transient faults retry in place.
+    * ``max_attempts`` — bounded attempts per query across retries and
+      ladder steps (the ladder never loops forever).
+    * ``backoff_base_s`` / ``backoff_multiplier`` — exponential backoff
+      between attempts: sleep ``base * multiplier**(attempt-1)`` before
+      attempt ``attempt+1``.  The default base of 0 disables sleeping
+      (deterministic tests); the session clock is injectable
+      (``Session._sleep``) so backoff tests never wall-sleep.
+    * ``window_close_retries`` — bounded retries of the window-close
+      step itself when its fault point fires.
+    * ``audit_windows`` — run ``MemoryManager.audit()`` after every
+      window and ``reconcile()`` on violations (cheap: pure bookkeeping
+      arithmetic over live entries).
+    * ``faults`` — optional :class:`~repro.core.faults.FaultConfig`
+      enabling the deterministic fault-injection harness.
+    """
+
+    isolate: bool = True
+    degrade: bool = True
+    max_attempts: int = 4
+    backoff_base_s: float = 0.0
+    backoff_multiplier: float = 2.0
+    window_close_retries: int = 2
+    audit_windows: bool = True
+    faults: Optional[Any] = None      # core.faults.FaultConfig
+
+
+@dataclass(frozen=True)
 class SessionConfig:
     """Everything a Session needs, in one frozen value.
 
@@ -144,6 +181,7 @@ class SessionConfig:
     execution: ExecutionConfig = field(default_factory=ExecutionConfig)
     memory: MemoryConfig = field(default_factory=MemoryConfig)
     mqo: MqoConfig = field(default_factory=MqoConfig)
+    resilience: ResilienceConfig = field(default_factory=ResilienceConfig)
 
     def with_execution(self, **kw) -> "SessionConfig":
         return replace(self, execution=replace(self.execution, **kw))
@@ -153,6 +191,13 @@ class SessionConfig:
 
     def with_mqo(self, **kw) -> "SessionConfig":
         return replace(self, mqo=replace(self.mqo, **kw))
+
+    def with_resilience(self, **kw) -> "SessionConfig":
+        return replace(self, resilience=replace(self.resilience, **kw))
+
+    def with_faults(self, faults) -> "SessionConfig":
+        """Attach a :class:`~repro.core.faults.FaultConfig` (or None)."""
+        return self.with_resilience(faults=faults)
 
     _LEGACY_EXECUTION_KEYS = frozenset(
         ("fuse", "defer_sync", "use_scan_cache", "sharding",
@@ -186,6 +231,29 @@ class SessionConfig:
 # ---------------------------------------------------------------------------
 # lazy handles
 # ---------------------------------------------------------------------------
+@dataclass
+class QueryError:
+    """Terminal failure state of a :class:`QueryHandle`: the exception
+    that killed the query after the resilience machinery gave up, plus
+    the degradation/retry history that led there.  Sibling queries in
+    the window are unaffected (per-query fault isolation)."""
+
+    exception: BaseException
+    window: int = -1
+    position: int = -1
+    attempts: int = 0
+    events: List[dict] = field(default_factory=list)
+    # strict cache keys (hex) the query's plan consumed that ARE
+    # materialized despite the failure — work salvaged for siblings
+    # and later windows
+    salvaged_ces: List[str] = field(default_factory=list)
+
+    def __repr__(self) -> str:
+        return (f"QueryError({type(self.exception).__name__}: "
+                f"{self.exception}, window={self.window}, "
+                f"position={self.position}, attempts={self.attempts})")
+
+
 class QueryHandle:
     """A submitted query: resolves when its micro-batch window runs.
 
@@ -194,7 +262,7 @@ class QueryHandle:
     logical tree the window optimizes."""
 
     __slots__ = ("plan", "node", "hint_cache", "seq", "_service",
-                 "_query_result", "_explain", "_done")
+                 "_query_result", "_explain", "_done", "_error")
 
     def __init__(self, service: "QueryService", plan, seq: int, *,
                  node: Optional[L.Node] = None, hint_cache: bool = False):
@@ -206,18 +274,34 @@ class QueryHandle:
         self._query_result = None
         self._explain = None
         self._done = False
+        self._error: Optional[QueryError] = None
 
     @property
     def done(self) -> bool:
         return self._done
 
+    @property
+    def failed(self) -> bool:
+        """True when the handle resolved to a :class:`QueryError`."""
+        return self._done and self._error is not None
+
+    @property
+    def error(self) -> Optional["QueryError"]:
+        """The terminal failure state (None while pending or on
+        success); inspecting it never raises — use ``result()`` to
+        re-raise."""
+        return self._error
+
     def result(self):
         """The query's output Table, forcing the window closed if this
-        handle is still sitting in it (laziness must not deadlock)."""
+        handle is still sitting in it (laziness must not deadlock).
+        A failed query re-raises the exception that killed it."""
         if not self._done:
             self._service._force(self)
         if not self._done:
             raise RuntimeError("handle was not resolved by its window")
+        if self._error is not None:
+            raise self._error.exception
         return self._query_result.table
 
     @property
@@ -225,6 +309,8 @@ class QueryHandle:
         """The full QueryResult (table + seconds + executed plan)."""
         if not self._done:
             self.result()
+        if self._error is not None:
+            raise self._error.exception
         return self._query_result
 
     def explain(self) -> dict:
@@ -245,8 +331,14 @@ class QueryHandle:
         self._explain = explain
         self._done = True
 
+    def _resolve_error(self, error: "QueryError", explain: dict) -> None:
+        self._error = error
+        self._explain = explain
+        self._done = True
+
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
-        state = "done" if self._done else "pending"
+        state = ("failed" if self.failed
+                 else "done" if self._done else "pending")
         return f"QueryHandle(seq={self.seq}, {state})"
 
 
@@ -374,17 +466,69 @@ class QueryService:
                     k: Optional[int] = None,
                     budget_bytes: Any = _UNSET,
                     locally_optimize: Optional[bool] = None):
-        from .executor import BatchResult
+        """Close one window: optimize, execute, resolve every handle.
 
+        Exception safety (PR 6): ``flush()`` detached the window's
+        state BEFORE this runs, so the service itself can never be left
+        with a half-closed window — the corruption an escaping
+        exception used to cause was permanently-unresolved handles.
+        The safety net here guarantees every handle resolves to a
+        result or a :class:`QueryError` no matter where the window
+        died; with isolation off (or on non-Exception unwinds like
+        KeyboardInterrupt) the exception still propagates to the
+        caller afterwards."""
         sess = self.session
         window = self._n_windows
         self._n_windows += 1
+        res = getattr(sess, "resilience", None)
+        try:
+            batch = self._run_window_inner(
+                handles, window, mqo=mqo, k=k, budget_bytes=budget_bytes,
+                locally_optimize=locally_optimize)
+        except BaseException as exc:
+            self._resolve_window_error(handles, exc, window)
+            self._audit_after_window(sess, res, None)
+            if (res is not None and res.isolate
+                    and isinstance(exc, Exception)):
+                from .executor import BatchResult
+
+                batch = BatchResult([None] * len(handles), 0.0)
+                batch.resilience = {"window_error": repr(exc),
+                                    "n_failed": len(handles)}
+                return batch
+            raise
+        self._audit_after_window(sess, res, batch)
+        return batch
+
+    def _run_window_inner(self, handles: List[QueryHandle], window: int,
+                          *, mqo, k, budget_bytes, locally_optimize):
+        from .executor import BatchResult
+        from .physical import CEMaterializationError
+
+        sess = self.session
+        res = getattr(sess, "resilience", None)
+        injector = getattr(sess, "fault_injector", None)
+        isolate = res is not None and res.isolate
         mqo = self.mqo if mqo is None else mqo
         k = self.k if k is None else k
         local = (self.locally_optimize if locally_optimize is None
                  else locally_optimize)
         budget_req = (self.budget_bytes if budget_bytes is _UNSET
                       else budget_bytes)
+
+        # the window-close step is itself a named fault point, retried
+        # a bounded number of times with backoff (each retry draws a
+        # fresh decision from the seeded stream)
+        if injector is not None:
+            retries = res.window_close_retries if res is not None else 0
+            for attempt in range(retries + 1):
+                try:
+                    injector.check("window_close")
+                    break
+                except InjectedFault:
+                    if attempt >= retries:
+                        raise
+                    sess._backoff(attempt + 1)
 
         # The canonicalization pass runs for EVERY plan — builder-made
         # or hand-made — before anything fingerprints, so syntactic
@@ -393,138 +537,271 @@ class QueryService:
         # fingerprint.  It brackets local optimization: equal canonical
         # inputs make the deterministic single-query pass emit equal
         # trees, and the trailing pass restores normal form on whatever
-        # that pass rebuilt.
-        plans = [canonicalize_plan(h.node) for h in handles]
-        if local:
-            plans = [canonicalize_plan(optimize_single(p)) for p in plans]
+        # that pass rebuilt.  Per-query isolation starts here: one
+        # poisoned plan fails only its own handle, and the window
+        # optimizes the survivors.
+        n = len(handles)
+        plans: List[Optional[L.Node]] = [None] * n
+        errors: Dict[int, BaseException] = {}
+        events: Dict[int, List[DegradationEvent]] = {
+            i: [] for i in range(n)}
+        for i, h in enumerate(handles):
+            try:
+                p = canonicalize_plan(h.node)
+                if local:
+                    p = canonicalize_plan(optimize_single(p))
+                plans[i] = p
+            except Exception as exc:
+                if not isolate:
+                    raise
+                errors[i] = exc
+        live = [i for i in range(n) if i not in errors]
 
-        if not mqo:
+        optimized = None
+        ces: list = []
+        pre_resident: frozenset = frozenset()
+        executed: List[Optional[L.Node]] = list(plans)
+        if not mqo or not live:
             ctx = sess._fresh_ctx()
-            t0 = time.perf_counter()
-            results = [sess.run_one(p, ctx) for p in plans]
-            batch = BatchResult(results, time.perf_counter() - t0,
-                                metrics=ctx.metrics)
-            self._resolve(handles, batch, window, mqo=False, k=k,
-                          executed_plans=plans, ce_by_key={},
-                          pre_resident=frozenset())
-            return batch
-
-        # cache_hint() submissions: every loose ψ under a hinted plan is
-        # an SE candidate even with a single consumer, re-priced with a
-        # phantom future consumer (see MultiQueryOptimizer.optimize).
-        # Computed only on the MQO path — the Merkle walks would be
-        # wasted work under mqo=False.
-        hinted = frozenset()
-        for h, p in zip(handles, plans):
-            if h.hint_cache:
-                hinted |= fingerprint_set(p)
-
-        budget = budget_req if budget_req is not None else sess.budget
-        cache = sess._ce_cache
-        if not sess.retain_across_batches:
-            # clear BEFORE computing the planning capacity: the freed
-            # CE bytes are available to this window's MCKP
-            cache.clear()
-            sess._resident_index.clear()
         else:
-            # prune metadata for entries the hierarchy has dropped —
-            # this dict must not grow with the workload's history
-            for sfp in [s for s in sess._resident_index
-                        if not cache.contains(s)]:
-                del sess._resident_index[sfp]
-        capacity = sess.planning_capacity(budget)
-        partitioner = None
-        # prune=False must force the UNPRUNED path end to end: CE
-        # partitioning both prunes live partitions and executes
-        # partition-restricted scans, so the debugging knob disables it
-        if sess.prune and any(st.partitions is not None
-                              for st in sess.catalog.values()):
-            from .partition import make_ce_partitioner
+            # cache_hint() submissions: every loose ψ under a hinted
+            # plan is an SE candidate even with a single consumer,
+            # re-priced with a phantom future consumer (see
+            # MultiQueryOptimizer.optimize).  Computed only on the MQO
+            # path — the Merkle walks would be wasted work otherwise.
+            hinted = frozenset()
+            for i in live:
+                if handles[i].hint_cache:
+                    hinted |= fingerprint_set(plans[i])
 
-            partitioner = make_ce_partitioner(sess.catalog)
-        optimizer = MultiQueryOptimizer(
-            cost_model=sess.cost_model,
-            rewriter=RelationalRewriter(fuse_residuals=sess.fuse),
-            budget_bytes=capacity,
-            k=k,
-            ce_transform=make_ce_transform(),
-            max_compound_size=sess.config.mqo.max_compound_size,
-            chain_cache_plans=sess.config.mqo.chain_cache_plans,
-            partitioner=partitioner,
-        )
-        # loose psi -> strict fingerprints of every resident covering
-        # relation with that structure (a zero planning budget disables
-        # resident reuse — it is the "no caching at all" baseline);
-        # partition-grained residents are keyed (strict, pid) and
-        # re-priced per partition
-        resident: Dict[bytes, Set[bytes]] = {}
-        resident_parts: Dict[bytes, frozenset] = {}
-        if budget > 0:
-            for sfp, psi in sess._resident_index.items():
-                resident.setdefault(psi, set()).add(sfp)
-            resident_parts = sess.ce_resident_parts()
-        optimized = optimizer.optimize(list(plans), resident=resident,
-                                       resident_parts=resident_parts,
-                                       hinted=hinted)
+            budget = budget_req if budget_req is not None else sess.budget
+            cache = sess._ce_cache
+            if not sess.retain_across_batches:
+                # clear BEFORE computing the planning capacity: the
+                # freed CE bytes are available to this window's MCKP
+                cache.clear()
+                sess._resident_index.clear()
+            else:
+                # prune metadata for entries the hierarchy has dropped —
+                # this dict must not grow with the workload's history
+                for sfp in [s for s in sess._resident_index
+                            if not cache.contains(s)]:
+                    del sess._resident_index[sfp]
+            capacity = sess.planning_capacity(budget)
+            partitioner = None
+            # prune=False must force the UNPRUNED path end to end: CE
+            # partitioning both prunes live partitions and executes
+            # partition-restricted scans, so the debugging knob
+            # disables it
+            if sess.prune and any(st.partitions is not None
+                                  for st in sess.catalog.values()):
+                from .partition import make_ce_partitioner
 
-        ces = optimized.rewritten.ces
-        # strict keys cannot collide across content, so no stale-entry
-        # eviction is needed; record which selected CEs are already
-        # materialized BEFORE this window executes (handle.explain).
-        # A partitioned CE counts as resident when ANY of its
-        # partitions is (that is what partial residency means).
-        pre_resident = frozenset(
-            ce.strict_psi() for ce in ces
-            if (cache.contains(ce.strict_psi())
-                or (ce.partition_detail is not None
-                    and resident_parts.get(ce.strict_psi()))))
-        if sess.retain_across_batches:
+                partitioner = make_ce_partitioner(sess.catalog)
+            optimizer = MultiQueryOptimizer(
+                cost_model=sess.cost_model,
+                rewriter=RelationalRewriter(fuse_residuals=sess.fuse),
+                budget_bytes=capacity,
+                k=k,
+                ce_transform=make_ce_transform(),
+                max_compound_size=sess.config.mqo.max_compound_size,
+                chain_cache_plans=sess.config.mqo.chain_cache_plans,
+                partitioner=partitioner,
+            )
+            # loose psi -> strict fingerprints of every resident
+            # covering relation with that structure (a zero planning
+            # budget disables resident reuse — it is the "no caching at
+            # all" baseline); partition-grained residents are keyed
+            # (strict, pid) and re-priced per partition
+            resident: Dict[bytes, Set[bytes]] = {}
+            resident_parts: Dict[bytes, frozenset] = {}
+            if budget > 0:
+                for sfp, psi in sess._resident_index.items():
+                    resident.setdefault(psi, set()).add(sfp)
+                resident_parts = sess.ce_resident_parts()
+            optimized = optimizer.optimize(
+                [plans[i] for i in live], resident=resident,
+                resident_parts=resident_parts, hinted=hinted)
+
+            ces = optimized.rewritten.ces
+            # strict keys cannot collide across content, so no
+            # stale-entry eviction is needed; record which selected CEs
+            # are already materialized BEFORE this window executes
+            # (handle.explain).  A partitioned CE counts as resident
+            # when ANY of its partitions is (that is what partial
+            # residency means).
+            pre_resident = frozenset(
+                ce.strict_psi() for ce in ces
+                if (cache.contains(ce.strict_psi())
+                    or (ce.partition_detail is not None
+                        and resident_parts.get(ce.strict_psi()))))
+            if sess.retain_across_batches:
+                for ce in ces:
+                    # partitioned CEs are retained per (strict, pid)
+                    # cache entry; whole-CE re-pricing would be unsound
+                    if ce.partition_detail is None:
+                        sess._resident_index[ce.strict_psi()] = ce.psi
+            ctx = sess._fresh_ctx(cache)
+            ctx.cache_plans = dict(optimized.rewritten.cache_plans)
+            # execution-side records for partition-grained CEs: which
+            # partitions are live, which the MCKP admitted,
+            # per-partition benefit shares for the eviction policy
             for ce in ces:
-                # partitioned CEs are retained per (strict, pid) cache
-                # entry; whole-CE re-pricing would be unsound for them
                 if ce.partition_detail is None:
-                    sess._resident_index[ce.strict_psi()] = ce.psi
-        ctx = sess._fresh_ctx(cache)
-        ctx.cache_plans = dict(optimized.rewritten.cache_plans)
-        # execution-side records for partition-grained CEs: which
-        # partitions are live, which the MCKP admitted, per-partition
-        # benefit shares for the eviction policy
-        for ce in ces:
-            if ce.partition_detail is None:
-                continue
-            pplan, slices = ce.partition_detail
-            pplan.admitted = ce.admitted_partitions or frozenset()
-            pplan.benefits = {
-                sl.pid: max(float(sl.value), 0.0) for sl in slices}
-            ctx.partitioned_ces[ce.strict_psi()] = pplan
-        # benefit-per-byte eviction ranks entries by the cost model's
-        # savings estimate (Eq. 3 value at admission time)
-        ctx.cache_values = {ce.strict_psi(): max(float(ce.value), 0.0)
-                            for ce in ces}
+                    continue
+                pplan, slices = ce.partition_detail
+                pplan.admitted = ce.admitted_partitions or frozenset()
+                pplan.benefits = {
+                    sl.pid: max(float(sl.value), 0.0) for sl in slices}
+                ctx.partitioned_ces[ce.strict_psi()] = pplan
+            # benefit-per-byte eviction ranks entries by the cost
+            # model's savings estimate (Eq. 3 value at admission time)
+            ctx.cache_values = {ce.strict_psi(): max(float(ce.value), 0.0)
+                                for ce in ces}
+            for j, i in enumerate(live):
+                executed[i] = optimized.rewritten.plans[j]
 
         t0 = time.perf_counter()
-        results = [sess.run_one(p, ctx) for p in optimized.rewritten.plans]
+        results: List[Optional[Any]] = [None] * n
+        for i in live:
+            try:
+                results[i] = sess.run_one_resilient(
+                    executed[i], ctx, query=i, events=events[i])
+            except CEMaterializationError as exc:
+                # a shared CE is poisoned: rerun THIS consumer on its
+                # unshared residual plan (the pre-rewrite canonical
+                # tree).  Sibling consumers fail fast on the poisoned ψ
+                # and fall back the same way, independently.
+                events[i].append(DegradationEvent(
+                    query=i, attempt=len(events[i]) + 1,
+                    action="fallback", level="residual",
+                    error=repr(exc)))
+                try:
+                    results[i] = sess.run_one_resilient(
+                        plans[i], ctx, query=i, events=events[i])
+                    executed[i] = plans[i]
+                except Exception as exc2:
+                    if not isolate:
+                        raise
+                    errors[i] = exc2
+            except Exception as exc:
+                if not isolate:
+                    raise
+                errors[i] = exc
         total = time.perf_counter() - t0
+
         batch = BatchResult(
             results, total,
-            optimize_seconds=optimized.report.optimize_seconds,
+            optimize_seconds=(optimized.report.optimize_seconds
+                              if optimized is not None else 0.0),
             mqo=optimized,
-            cache_report=cache.report(),
+            cache_report=(sess._ce_cache.report()
+                          if optimized is not None else {}),
             metrics=ctx.metrics,
         )
+        all_events = [e.as_dict()
+                      for i in range(n) for e in events[i]]
+        rep: Dict[str, Any] = {}
+        if all_events:
+            rep["events"] = all_events
+        if errors or not live:
+            rep["n_failed"] = len(errors)
+        if injector is not None:
+            rep["faults"] = injector.report()
+        batch.resilience = rep
         ce_by_key = {ce.strict_psi(): ce for ce in ces}
-        self._resolve(handles, batch, window, mqo=True, k=k,
-                      executed_plans=optimized.rewritten.plans,
-                      ce_by_key=ce_by_key, pre_resident=pre_resident)
+        self._resolve(handles, batch, window, mqo=bool(mqo), k=k,
+                      executed_plans=executed, ce_by_key=ce_by_key,
+                      pre_resident=pre_resident, errors=errors,
+                      events=events, ctx=ctx)
         return batch
 
     def _resolve(self, handles, batch, window, *, mqo, k,
-                 executed_plans, ce_by_key, pre_resident) -> None:
+                 executed_plans, ce_by_key, pre_resident,
+                 errors=None, events=None, ctx=None) -> None:
         n = len(handles)
+        errors = errors or {}
+        events = events or {}
         for i, (h, qr) in enumerate(zip(handles, batch.results)):
+            if h._done:
+                continue
+            if i in errors or qr is None:
+                exc = errors.get(i, RuntimeError("query was not executed"))
+                err, explain = self._failure_state(
+                    h, exc, window, i, n, events.get(i, ()),
+                    executed_plans[i], ctx)
+                h._resolve_error(err, explain)
+                continue
             h._resolve(qr, _LazyExplain(
                 h, qr, window, i, n, bool(mqo), k,
                 executed_plans[i], ce_by_key, pre_resident))
+
+    @staticmethod
+    def _failure_state(handle, exc, window, position, n, events, plan,
+                       ctx):
+        """The (QueryError, explain dict) pair for one failed handle:
+        the triggering exception, the retry/degradation history, and
+        which CEs of its rewritten plan were salvaged (materialized
+        despite the failure — reusable by siblings and later windows)
+        versus poisoned."""
+        evs = [e.as_dict() for e in events]
+        salvaged: List[str] = []
+        failed_ces: List[str] = []
+        cache = getattr(ctx, "cache", None) if ctx is not None else None
+        if plan is not None and cache is not None:
+            for key in _cached_scan_keys(plan):
+                if key in getattr(ctx, "failed_ces", ()):
+                    failed_ces.append(key.hex()[:12])
+                elif cache.contains(key):
+                    salvaged.append(key.hex()[:12])
+        err = QueryError(
+            exception=exc, window=window, position=position,
+            attempts=max([e["attempt"] for e in evs], default=1),
+            events=evs, salvaged_ces=salvaged)
+        explain = {
+            "status": "failed",
+            "window": window,
+            "position": position,
+            "window_size": n,
+            "error": repr(exc),
+            "events": evs,
+            "ces_salvaged": salvaged,
+            "ces_failed": failed_ces,
+            "submitted": L.explain(handle.node),
+        }
+        return err, explain
+
+    @staticmethod
+    def _resolve_window_error(handles, exc, window) -> None:
+        """Safety net: resolve every still-pending handle of a window
+        that died outside the per-query execution loop."""
+        n = len(handles)
+        for i, h in enumerate(handles):
+            if h._done:
+                continue
+            h._resolve_error(
+                QueryError(exception=exc, window=window, position=i),
+                {"status": "failed", "window": window, "position": i,
+                 "window_size": n, "error": repr(exc), "events": [],
+                 "ces_salvaged": [], "ces_failed": []})
+
+    @staticmethod
+    def _audit_after_window(sess, res, batch) -> None:
+        """Post-window pool self-audit: verify the memory invariants
+        and repair (quarantine-then-drop) on violation, recording both
+        in the window report."""
+        if res is None or not res.audit_windows:
+            return
+        mm = getattr(sess, "memory", None)
+        if mm is None or not hasattr(mm, "audit"):
+            return
+        violations = mm.audit()
+        repair = mm.reconcile() if violations else None
+        if batch is not None:
+            batch.resilience["audit"] = {
+                "violations": list(violations),
+                "repair": repair,
+            }
 
 
 class _LazyExplain:

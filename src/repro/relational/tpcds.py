@@ -121,16 +121,24 @@ def generate_tpcds_catalog(scale_rows: int = 100_000, seed: int = 0
 
 def build_tpcds_session(scale_rows: int = 100_000, fmt: str = "columnar",
                         budget_bytes: int = 1 << 30, seed: int = 0,
+                        config: SessionConfig = None,
                         **session_kw) -> Session:
     """``session_kw`` forwards memory-hierarchy knobs (policy,
     host_budget_bytes, retain_across_batches, ...); they are folded
     into a :class:`SessionConfig` here, so this helper stays off the
-    deprecated legacy-kwargs path."""
+    deprecated legacy-kwargs path.  A full ``config`` (e.g. one
+    carrying resilience/fault-injection settings) takes precedence
+    and must not be mixed with legacy knobs."""
     from .datagen import make_storage
 
     catalog = generate_tpcds_catalog(scale_rows, seed)
-    cfg = SessionConfig.from_legacy_kwargs(budget_bytes=budget_bytes,
-                                           **session_kw)
+    if config is not None:
+        assert not session_kw and budget_bytes == 1 << 30, \
+            "pass either a full SessionConfig or legacy knobs, not both"
+        cfg = config
+    else:
+        cfg = SessionConfig.from_legacy_kwargs(budget_bytes=budget_bytes,
+                                               **session_kw)
     sess = Session.from_config(cfg)
     for name, (schema, nrows, cols) in catalog.items():
         st, _ = make_storage(name, schema, nrows, fmt, cols=cols)
