@@ -1,0 +1,143 @@
+"""PR 7 acceptance: window-batched kernel execution + plan-shape
+compile cache.
+
+A recurring dashboard template family — N_QUERIES same-SHAPE filter
+pipelines over one table, literals fresh every window — is streamed
+for N_WINDOWS windows through two sessions:
+
+* **baseline** — ``window_batch=False, shape_cache=False``: per-query
+  dispatch with literal-keyed jit, so every window's fresh literals
+  re-trace every query (the pre-PR-7 behavior);
+* **batched** — the defaults: the window's same-shape plans execute as
+  ONE batched mask dispatch whose compiled function is keyed by plan
+  shape (literals hoisted into operand arrays), so only window 0 ever
+  traces.
+
+Acceptance (RuntimeError on violation — ``run.py`` counts module
+exceptions as failures, so CI fails loudly):
+
+* warm (windows 1+) throughput >= ``MIN_WARM_SPEEDUP`` x baseline;
+* trace-cache hit rate is exactly 1.0 from the second window on
+  (``trace_misses == 0``);
+* every window actually took the shared dispatch
+  (``batched_dispatches >= 1``);
+* batched results are bit-identical to per-query baseline results.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from common import csv_line, save_result
+from repro.relational import Session, SessionConfig, expr as E, make_storage
+from repro.relational.datagen import generate_columns, synthetic_schema
+
+N_ROWS = 100_000
+N_QUERIES = 6               # template family size per window
+N_WINDOWS = 5               # window 0 is the cold (tracing) window
+FMT = "columnar"
+MIN_WARM_SPEEDUP = 3.0      # ISSUE 7 acceptance floor
+
+SCHEMA = synthetic_schema(n_int=6, n_dbl=4, n_str=2)
+COLS = generate_columns(SCHEMA, N_ROWS, seed=7)
+
+
+def _mk_session(window_batch: bool, shape_cache: bool) -> Session:
+    sess = Session.from_config(SessionConfig().with_execution(
+        window_batch=window_batch, shape_cache=shape_cache))
+    st, _ = make_storage("fact", SCHEMA, N_ROWS, FMT, cols=COLS)
+    sess.register(st, columnar_for_stats=COLS)
+    return sess
+
+
+def _window(sess: Session, w: int):
+    """One window of the recurring template: same plan shape for all
+    N_QUERIES members, literals a function of ``(w, i)`` so every
+    window is FRESH literals (a literal-keyed compile cache must
+    re-trace; the plan-shape cache must not)."""
+    qs = []
+    for i in range(N_QUERIES):
+        lo = 50 + 13 * i + 7 * w           # n1 uniform in [1, 1000]
+        hi = 920 - 11 * i - 5 * w
+        qs.append(sess.table("fact")
+                  .filter(E.and_(E.cmp("n1", ">", lo),
+                                 E.cmp("n1", "<", hi)))
+                  .project("n1", "n2", "d1"))
+    return qs
+
+
+def run() -> Dict:
+    base = _mk_session(window_batch=False, shape_cache=False)
+    batched = _mk_session(window_batch=True, shape_cache=True)
+
+    rows: List[Dict] = []
+    for w in range(N_WINDOWS):
+        rb = base.run_batch(_window(base, w), mqo=False)
+        rg = batched.run_batch(_window(batched, w), mqo=False)
+        # batched execution must be BIT-identical to per-query dispatch
+        for q, (a, b) in enumerate(zip(rb.results, rg.results)):
+            if a.table.row_multiset() != b.table.row_multiset():
+                raise RuntimeError(
+                    f"window_batch divergence: window {w} query {q} "
+                    f"differs between batched and per-query dispatch")
+        m = rg.metrics
+        hits, misses = m.trace_hits, m.trace_misses
+        rows.append({
+            "window": w,
+            "base_s": rb.total_seconds,
+            "batched_s": rg.total_seconds,
+            "trace_hits": hits,
+            "trace_misses": misses,
+            "trace_hit_rate": hits / max(hits + misses, 1),
+            "batched_dispatches": m.batched_dispatches,
+            "batched_queries": m.batched_queries,
+        })
+        if m.batched_dispatches < 1:
+            raise RuntimeError(
+                f"window_batch: window {w} never took the shared "
+                f"batched dispatch (batched_dispatches=0)")
+        if w >= 1 and misses != 0:
+            raise RuntimeError(
+                f"window_batch: plan-shape cache missed on window {w} "
+                f"({misses} trace misses — hit rate must be 1.0 from "
+                f"the second window on)")
+
+    warm = rows[1:]
+    warm_base = sum(r["base_s"] for r in warm)
+    warm_batched = sum(r["batched_s"] for r in warm)
+    speedup = warm_base / max(warm_batched, 1e-12)
+    out = {
+        "n_rows": N_ROWS, "n_queries": N_QUERIES,
+        "n_windows": N_WINDOWS, "fmt": FMT,
+        "rows": rows,
+        "warm_base_s": warm_base,
+        "warm_batched_s": warm_batched,
+        "warm_speedup": speedup,
+        "warm_trace_hit_rate": min(r["trace_hit_rate"] for r in warm),
+    }
+    save_result("window_batch", out)
+    if speedup < MIN_WARM_SPEEDUP:
+        raise RuntimeError(
+            f"window_batch: warm throughput only {speedup:.2f}x the "
+            f"per-query baseline (acceptance floor "
+            f"{MIN_WARM_SPEEDUP:.1f}x)")
+    return out
+
+
+def main() -> List[str]:
+    out = run()
+    lines = []
+    for r in out["rows"]:
+        lines.append(csv_line(
+            f"window_batch[w{r['window']}]",
+            r["batched_s"],
+            f"base={r['base_s']:.4f};hit_rate={r['trace_hit_rate']:.2f};"
+            f"dispatches={r['batched_dispatches']}"))
+    lines.append(csv_line(
+        "window_batch[warm]", out["warm_batched_s"],
+        f"speedup={out['warm_speedup']:.2f}x;"
+        f"hit_rate={out['warm_trace_hit_rate']:.2f}"))
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

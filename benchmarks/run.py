@@ -27,6 +27,10 @@ Prints ``name,us_per_call,derived`` CSV lines.
                           5% injected transient-fault rate vs the
                           fault-free warm stream: isolation + retry
                           overhead bounded — PR 6)
+  bench_window_batch      beyond-paper    (window-batched kernel
+                          execution + plan-shape compile cache: warm
+                          recurring-template windows vs per-query
+                          literal-keyed dispatch — PR 7)
   bench_serving_prefix    beyond-paper    (LLM prefix-cache MQO)
   roofline_report         assignment      (dry-run roofline terms)
 
@@ -56,6 +60,7 @@ MODULES = [
     "bench_canonical",
     "bench_partition",
     "bench_resilience",
+    "bench_window_batch",
     "bench_serving_prefix",
     "roofline_report",
 ]

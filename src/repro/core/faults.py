@@ -30,6 +30,9 @@ Named points (wired in ``relational.physical`` / ``core.memory`` /
 
     ``scan_h2d``       host→device transfer of scan columns
     ``kernel_launch``  fused-pipeline dispatch (Pallas or fused-XLA)
+    ``batched_launch`` a window's SHARED batched mask dispatch (fires
+                       once per window when >= 2 plans are batchable;
+                       the window degrades to per-query dispatch)
     ``ce_admission``   CE materialization entering the cache pool
     ``spill_to_host``  device→host spill of an eviction victim
     ``window_close``   the service's window close/execute step
@@ -44,8 +47,8 @@ import random
 from dataclasses import dataclass, field
 from typing import Dict, List, Mapping, Optional, Tuple
 
-FAULT_POINTS = ("scan_h2d", "kernel_launch", "ce_admission",
-                "spill_to_host", "window_close")
+FAULT_POINTS = ("scan_h2d", "kernel_launch", "batched_launch",
+                "ce_admission", "spill_to_host", "window_close")
 
 
 class TransientError(RuntimeError):

@@ -47,7 +47,9 @@ def _kernel_body(program: PredProgram, n_cols: int, block: int,
     valid = (row0 + jax.lax.iota(jnp.int32, block)) < nrows_ref[0]
     mask = mask & valid
     mask_ref[...] = mask
-    count_ref[0] = jnp.sum(mask.astype(jnp.int32))
+    # dtype pinned: under x64 jnp.sum would promote the
+    # accumulator to int64 and mismatch the int32 count ref
+    count_ref[0] = jnp.sum(mask.astype(jnp.int32), dtype=jnp.int32)
 
 
 @functools.partial(jax.jit,
@@ -89,6 +91,87 @@ def filter_scan(columns: Tuple[jnp.ndarray, ...], program: PredProgram,
         out_shape=out_shape,
         interpret=interpret,
     )(jnp.asarray([nrows], jnp.int32), *columns)
+    return mask, counts
+
+
+def _batch_kernel_body(program: PredProgram, n_cols: int, n_q: int,
+                       block: int, nrows_ref, ic_ref, fc_ref, *refs):
+    col_refs = refs[:n_cols]
+    mask_ref, count_ref = refs[n_cols], refs[n_cols + 1]
+    bid = pl.program_id(0)
+
+    cols = [r[...] for r in col_refs]
+    # one pass over the block evaluates every query's slotted program
+    # row: the (n_q, k) const arrays broadcast against the (block,)
+    # columns inside eval_program, giving an (n_q, block) mask
+    mask = eval_program(program, cols, iconsts=ic_ref[...],
+                        fconsts=fc_ref[...], bshape=(n_q, block))
+
+    row0 = bid * block
+    # 2-D iota: TPU cannot lower a 1-D iota (see pallas guide)
+    valid = (row0 + jax.lax.broadcasted_iota(jnp.int32, (n_q, block), 1)
+             ) < nrows_ref[0]
+    mask = mask & valid
+    mask_ref[...] = mask
+    count_ref[...] = jnp.sum(mask.astype(jnp.int32), axis=1,
+                             keepdims=True, dtype=jnp.int32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("program", "block", "interpret"))
+def filter_scan_batch(columns: Tuple[jnp.ndarray, ...],
+                      program: PredProgram, nrows,
+                      iconsts: jnp.ndarray, fconsts: jnp.ndarray, *,
+                      block: int = DEFAULT_BLOCK,
+                      interpret: bool = False):
+    """Window-batched fused predicate scan: n queries, ONE launch.
+
+    The program is SLOTTED — literals live in the ``(n_q, k)`` operand
+    arrays, not the static program — so every window of the same plan
+    shape reuses one trace, and the columns stream HBM -> VMEM once for
+    all n queries instead of once per query.
+
+    Args:
+      columns: tuple of (N,) numeric column arrays, N % block == 0.
+      program: static slotted postfix program (see ref.PredProgram).
+      nrows: live row count (rows beyond it never match).
+      iconsts / fconsts: (n_q, k_i) int32 / (n_q, k_f) float32 operand
+        arrays (k >= 1; pad with zeros when a class is unused).
+    Returns:
+      (mask bool (n_q, N), per-block counts int32 (n_q, N//block)).
+    """
+    n = columns[0].shape[0]
+    assert n % block == 0, (n, block)
+    grid = (n // block,)
+    n_cols = len(columns)
+    n_q, ki = iconsts.shape
+    kf = fconsts.shape[1]
+
+    in_specs = [
+        pl.BlockSpec((1,), lambda i: (0,)),            # nrows scalar
+        pl.BlockSpec((n_q, ki), lambda i: (0, 0)),     # int consts
+        pl.BlockSpec((n_q, kf), lambda i: (0, 0)),     # float consts
+    ]
+    in_specs += [pl.BlockSpec((block,), lambda i: (i,))
+                 for _ in range(n_cols)]
+    out_specs = [
+        pl.BlockSpec((n_q, block), lambda i: (0, i)),
+        pl.BlockSpec((n_q, 1), lambda i: (0, i)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((n_q, n), jnp.bool_),
+        jax.ShapeDtypeStruct((n_q, grid[0]), jnp.int32),
+    ]
+    kernel = functools.partial(_batch_kernel_body, program, n_cols, n_q,
+                               block)
+    mask, counts = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(jnp.asarray([nrows], jnp.int32), iconsts, fconsts, *columns)
     return mask, counts
 
 

@@ -12,9 +12,14 @@ from typing import Dict, List, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+import functools
+
+import numpy as np
+
 from ...relational import expr as E
-from .kernel import DEFAULT_BLOCK, filter_scan, parse_i32
-from .ref import PredProgram, filter_scan_ref
+from .kernel import DEFAULT_BLOCK, filter_scan, filter_scan_batch, \
+    parse_i32
+from .ref import PredProgram, filter_scan_batch_ref, filter_scan_ref
 
 _OPMAP = {"<": "lt", "<=": "le", ">": "gt", ">=": "ge", "==": "eq",
           "!=": "ne"}
@@ -47,6 +52,10 @@ def compile_predicate(pred: E.Expr, col_names: Sequence[str]
             if isinstance(v, (bytes, str)):
                 raise ValueError("string predicates unsupported in kernel")
             prog.append((_OPMAP[e.op], idx[e.col.name], v))
+        elif isinstance(e, E.In):
+            if any(isinstance(v, (bytes, str)) for v in e.values):
+                raise ValueError("string membership unsupported in kernel")
+            prog.append(("in", idx[e.col.name], tuple(e.values)))
         elif isinstance(e, E.And):
             walk(e.parts[0])
             for p in e.parts[1:]:
@@ -65,6 +74,107 @@ def compile_predicate(pred: E.Expr, col_names: Sequence[str]
 
     walk(pred)
     return tuple(prog)
+
+
+def compile_predicate_slots(pred: E.Expr, col_names: Sequence[str],
+                            kinds: Dict[str, str]
+                            ) -> Tuple[PredProgram, tuple, tuple]:
+    """Relational Expr -> SLOTTED postfix program + hoisted literals.
+
+    The program is the predicate's *shape*: i32/f32 compare constants
+    are replaced by ``("$i", j)`` / ``("$f", j)`` slot references and
+    returned separately as ``(ivals, fvals)``, so every literal variant
+    of one template compiles to the SAME static program (one trace, one
+    plan-shape cache key) and a window of variants can evaluate as one
+    batch.  Fractional-on-int folding runs here, against the column
+    ``kinds`` ({name: "i32"|"i64"|"f32"}), so the slotted result is
+    bit-identical to the literal program's trace-time fold.  ``In``
+    values and i64 constants stay embedded (no 64-bit slot lane);
+    unsupported predicates raise ValueError/KeyError like
+    :func:`compile_predicate`.
+    """
+    idx = {n: i for i, n in enumerate(col_names)}
+    prog: List[tuple] = []
+    ivals: List[int] = []
+    fvals: List[float] = []
+
+    def walk(e: E.Expr):
+        if isinstance(e, E.TrueExpr):
+            prog.append(("const", True))
+        elif isinstance(e, E.Cmp):
+            e = E.oriented(e)
+            if isinstance(e.col, E.Lit):
+                raise ValueError("constant compare unsupported in kernel")
+            if isinstance(e.rhs, E.Col):
+                prog.append((_OPMAP[e.op] + "c", idx[e.col.name],
+                             idx[e.rhs.name]))
+                return
+            v = e.rhs.value
+            if isinstance(v, (bytes, str)):
+                raise ValueError("string predicates unsupported in kernel")
+            kind = kinds[e.col.name]
+            ci = idx[e.col.name]
+            opn = _OPMAP[e.op]
+            if kind in ("i32", "i64"):
+                if isinstance(v, float) and not v.is_integer():
+                    folded = E.fold_int_cmp(
+                        e.op, v, bits=64 if kind == "i64" else 32)
+                    if folded[0] == "all":
+                        prog.append(("const", folded[1]))
+                        return
+                    _, opsym, v = folded
+                    opn = _OPMAP[opsym]
+                v = int(v)
+                if kind == "i64":
+                    # i64 consts stay literal in the (static) program
+                    prog.append((opn, ci, v))
+                    return
+                if not -(2 ** 31) <= v <= 2 ** 31 - 1:
+                    raise ValueError("const exceeds int32 slot range")
+                prog.append((opn, ci, ("$i", len(ivals))))
+                ivals.append(v)
+            else:
+                prog.append((opn, ci, ("$f", len(fvals))))
+                fvals.append(float(v))
+        elif isinstance(e, E.In):
+            if any(isinstance(v, (bytes, str)) for v in e.values):
+                raise ValueError("string membership unsupported in kernel")
+            kinds[e.col.name]   # KeyError for non-numeric columns
+            prog.append(("in", idx[e.col.name], tuple(e.values)))
+        elif isinstance(e, E.And):
+            walk(e.parts[0])
+            for p in e.parts[1:]:
+                walk(p)
+                prog.append(("and",))
+        elif isinstance(e, E.Or):
+            walk(e.parts[0])
+            for p in e.parts[1:]:
+                walk(p)
+                prog.append(("or",))
+        elif isinstance(e, E.Not):
+            walk(e.part)
+            prog.append(("not",))
+        else:
+            raise ValueError(type(e))
+
+    walk(pred)
+    return tuple(prog), tuple(ivals), tuple(fvals)
+
+
+def pack_consts(ival_rows: Sequence[tuple], fval_rows: Sequence[tuple]
+                ) -> Tuple[np.ndarray, np.ndarray]:
+    """Stack per-query hoisted literals into the kernel's ``(n_q, k)``
+    operand arrays (k >= 1 so an unused const class still has a lane)."""
+    n_q = len(ival_rows)
+    ki = max(max((len(r) for r in ival_rows), default=0), 1)
+    kf = max(max((len(r) for r in fval_rows), default=0), 1)
+    ic = np.zeros((n_q, ki), np.int32)
+    fc = np.zeros((n_q, kf), np.float32)
+    for q, row in enumerate(ival_rows):
+        ic[q, : len(row)] = row
+    for q, row in enumerate(fval_rows):
+        fc[q, : len(row)] = row
+    return ic, fc
 
 
 def kernel_supports(pred: E.Expr,
@@ -103,3 +213,36 @@ def filter_mask(columns: Tuple[jnp.ndarray, ...], program: PredProgram,
     else:
         mask, counts = filter_scan_ref(columns, program, nrows, block)
     return mask[:n], counts
+
+
+_batch_ref = functools.partial(
+    jax.jit, static_argnames=("program", "block"))(filter_scan_batch_ref)
+
+
+def filter_mask_batch(columns: Tuple[jnp.ndarray, ...],
+                      program: PredProgram, nrows,
+                      iconsts, fconsts, *, block: int = DEFAULT_BLOCK,
+                      use_pallas: bool = True,
+                      interpret: bool | None = None):
+    """n-query masks+counts in ONE dispatch over shared columns.
+
+    ``use_pallas=False`` routes through the jitted XLA oracle — the
+    fallback batch path when a program falls off the Pallas route."""
+    n = columns[0].shape[0]
+    padded_n = ((n + block - 1) // block) * block
+    if padded_n != n:
+        columns = tuple(
+            jnp.pad(c, ((0, padded_n - n),) + ((0, 0),) * (c.ndim - 1))
+            for c in columns)
+    iconsts = jnp.asarray(iconsts, jnp.int32)
+    fconsts = jnp.asarray(fconsts, jnp.float32)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if use_pallas:
+        mask, counts = filter_scan_batch(columns, program, nrows,
+                                         iconsts, fconsts, block=block,
+                                         interpret=interpret)
+    else:
+        mask, counts = _batch_ref(columns, program, nrows, iconsts,
+                                  fconsts, block=block)
+    return mask[:, :n], counts

@@ -19,7 +19,7 @@ from .physical import (CEMaterializationError, ExecContext, ExecMetrics,
                        TableStorage, execute)
 from .rewriter import RelationalRewriter, make_ce_transform
 from .rules import optimize_single
-from .schema import F32, I32, STR, ColType, Schema, Table, next_pow2
+from .schema import F32, I32, I64, STR, ColType, Schema, Table, next_pow2
 from .service import (ExecutionConfig, MemoryConfig, MqoConfig,
                       QueryError, QueryHandle, QueryService,
                       ResilienceConfig, SessionConfig)

@@ -134,9 +134,19 @@ class ColExpr:
         return E.Col(self.name)
 
     def isin(self, values: Sequence[Literal]) -> Pred:
-        # route through _cmp so the literal coercion + non-finite
-        # guard apply exactly as they do for direct compares
-        return Pred(E.or_(*(self._cmp("==", v).expr for v in values)))
+        # each value routes through _cmp so the literal coercion +
+        # non-finite guard apply exactly as for direct compares; the
+        # validated literals then form ONE first-class membership node
+        # (the kernel evaluates it as a single opcode)
+        lits = []
+        for v in values:
+            e = self._cmp("==", v).expr
+            if not isinstance(e.rhs, E.Lit):
+                raise TypeError(
+                    f"isin over column {self.name!r} expects literal "
+                    f"values, got {type(v).__name__}")
+            lits.append(e.rhs.value)
+        return Pred(E.In(E.Col(self.name), tuple(lits)))
 
     def between(self, lo: Literal, hi: Literal) -> Pred:
         return Pred(E.and_(self._cmp(">=", lo).expr,
@@ -171,7 +181,7 @@ def as_expr(obj) -> E.Expr:
     or raw expr tree) to the expression IR."""
     if isinstance(obj, Pred):
         return obj.expr
-    if isinstance(obj, (E.Cmp, E.And, E.Or, E.Not, E.TrueExpr)):
+    if isinstance(obj, (E.Cmp, E.In, E.And, E.Or, E.Not, E.TrueExpr)):
         return obj
     if isinstance(obj, bool):
         return E.TRUE if obj else E.Not(E.TRUE)

@@ -94,6 +94,19 @@ def _canon(e: E.Expr, negate: bool) -> E.Expr:
         if isinstance(c.col, E.Lit) and isinstance(c.rhs, E.Lit):
             return E.TRUE if E.const_cmp(c) else FALSE
         return c
+    if isinstance(e, E.In):
+        # dedup + sort values by literal key; empty membership is FALSE,
+        # a singleton folds to the equivalent ``==`` compare.  There is
+        # no complement operator, so a negated multi-value In keeps its
+        # Not node (like the non-finite Cmp case above).
+        keyed = {E._lit_key(v): v for v in e.values}
+        vals = tuple(keyed[k] for k in sorted(keyed))
+        if not vals:
+            return E.TRUE if negate else FALSE
+        if len(vals) == 1:
+            return _canon(E.Cmp("==", e.col, E.Lit(vals[0])), negate)
+        c = E.In(e.col, vals)
+        return E.Not(c) if negate else c
     if isinstance(e, (E.And, E.Or)):
         # De Morgan: ¬(a ∧ b) = ¬a ∨ ¬b  (and dually)
         conj = isinstance(e, E.And) ^ negate

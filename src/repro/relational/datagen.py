@@ -45,6 +45,10 @@ def generate_columns(schema: Schema, nrows: int,
             hi = min(10 ** (int_idx + 2), 999_999_999)
             cols[name] = rng.integers(1, hi + 1, nrows, dtype=np.int64
                                       ).astype(np.int32)
+        elif t.kind == "i64":
+            # wide ints: beyond both int32 and exact-f32 range, so only
+            # a true 64-bit lane holds them
+            cols[name] = rng.integers(1, 2 ** 40, nrows, dtype=np.int64)
         elif t.kind == "f32":
             dbl_idx += 1
             cols[name] = rng.random(nrows, dtype=np.float64
@@ -100,6 +104,15 @@ def make_storage(name: str, schema: Schema, nrows: int, fmt: str,
     (the latter are needed for the stats pre-processing phase)."""
     if cols is None:
         cols = generate_columns(schema, nrows, seed)
+    if any(t.kind == "i64" for _, t in schema.fields):
+        if fmt == "csv":
+            raise ValueError("i64 columns are columnar-only (no fixed-"
+                             "width CSV encoding)")
+        import jax
+
+        if not jax.config.jax_enable_x64:
+            raise ValueError("i64 columns require JAX x64 mode (enable "
+                             "jax_enable_x64 before building storage)")
     if fmt == "csv":
         st = TableStorage(name=name, schema=schema, nrows=nrows, fmt="csv",
                           csv_bytes=to_csv_bytes(schema, cols, nrows))

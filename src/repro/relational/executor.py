@@ -173,6 +173,8 @@ class Session:
         self.use_scan_cache = ex.use_scan_cache
         self.use_pallas_filter = ex.use_pallas_filter
         self.prune = getattr(ex, "prune", True)
+        self.window_batch = getattr(ex, "window_batch", True)
+        self.shape_cache = getattr(ex, "shape_cache", True)
         # One budget-aware memory hierarchy for everything the session
         # materializes on device (see core.memory): the CE cache spills
         # device -> host -> drop; evicted scan columns just drop (their

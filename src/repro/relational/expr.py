@@ -87,7 +87,21 @@ class TrueExpr:
     pass
 
 
-Expr = Union[Cmp, And, Or, Not, TrueExpr]
+@dataclass(frozen=True)
+class In:
+    """List membership: ``col IN values`` (OR of equalities).
+
+    A first-class node rather than a sugar expansion so the kernel
+    compiler can emit one membership opcode instead of a (2k-1)-op
+    OR chain, and so selectivity can price it as k/ndv directly.
+    ``values`` is an ordered tuple of literals; canonicalization
+    dedups and sorts it (empty → FALSE, singleton → ``==``)."""
+
+    col: Col
+    values: Tuple[Value, ...]
+
+
+Expr = Union[Cmp, In, And, Or, Not, TrueExpr]
 TRUE = TrueExpr()
 
 
@@ -104,6 +118,10 @@ def cmp(name: str, op: str, value: Value) -> Cmp:
 
 def col_cmp(left: str, op: str, right: str) -> Cmp:
     return Cmp(op, Col(left), Col(right))
+
+
+def isin(name: str, values) -> In:
+    return In(Col(name), tuple(values))
 
 
 def and_(*parts: Expr) -> Expr:
@@ -154,6 +172,9 @@ def canonical(e: Expr) -> tuple:
         rhs = (("col", e.rhs.name) if isinstance(e.rhs, Col)
                else ("lit", _lit_key(e.rhs.value)))
         return ("cmp", e.op, e.col.name, rhs)
+    if isinstance(e, In):
+        return ("in", e.col.name,
+                tuple(sorted({_lit_key(v) for v in e.values})))
     if isinstance(e, And):
         return ("and",) + tuple(sorted(canonical(p) for p in e.parts))
     if isinstance(e, Or):
@@ -185,6 +206,8 @@ def columns_of(e: Expr) -> FrozenSet[str]:
         if isinstance(e.rhs, Col):
             cols.add(e.rhs.name)
         return frozenset(cols)
+    if isinstance(e, In):
+        return frozenset((e.col.name,))
     if isinstance(e, (And, Or)):
         out: FrozenSet[str] = frozenset()
         for p in e.parts:
@@ -235,7 +258,8 @@ def eval_expr(e: Expr, columns: Dict[str, jnp.ndarray]) -> jnp.ndarray:
                 # fractional threshold on an integer column: fold to an
                 # exact integer compare (truncating the const would flip
                 # <=/> at the edge; promoting to f32 is inexact > 2^24)
-                folded = fold_int_cmp(e.op, v)
+                folded = fold_int_cmp(
+                    e.op, v, bits=jnp.iinfo(lhs.dtype).bits)
                 if folded[0] == "all":
                     fill = jnp.ones if folded[1] else jnp.zeros
                     return fill((lhs.shape[0],), jnp.bool_)
@@ -252,6 +276,21 @@ def eval_expr(e: Expr, columns: Dict[str, jnp.ndarray]) -> jnp.ndarray:
             ">": lambda a, b: a > b, ">=": lambda a, b: a >= b,
             "==": lambda a, b: a == b, "!=": lambda a, b: a != b,
         }[e.op](lhs, rhs)
+    if isinstance(e, In):
+        # OR of equalities, routed through the Cmp path per value so
+        # string encoding / fractional-on-int folding stay identical;
+        # values unrepresentable in an integer column never match
+        lhs = columns[e.col.name]
+        m = jnp.zeros((lhs.shape[0],), jnp.bool_)
+        is_int = lhs.ndim == 1 and jnp.issubdtype(lhs.dtype, jnp.integer)
+        for v in e.values:
+            if (is_int and isinstance(v, (int, float))
+                    and not (isinstance(v, float) and not v.is_integer())):
+                info = jnp.iinfo(lhs.dtype)
+                if not info.min <= int(v) <= info.max:
+                    continue
+            m = m | eval_expr(Cmp("==", e.col, Lit(v)), columns)
+        return m
     if isinstance(e, And):
         m = eval_expr(e.parts[0], columns)
         for p in e.parts[1:]:
@@ -292,13 +331,14 @@ def const_cmp(e: Cmp) -> bool:
     }[e.op]()
 
 
-def fold_int_cmp(op: str, v: float):
+def fold_int_cmp(op: str, v: float, bits: int = 32):
     """Fold a fractional-threshold compare over an INTEGER column into
     an exact integer compare (promoting the column to f32 would be
     wrong beyond 2^24, where f32 cannot represent every int).
 
     Returns ("all", bool) when the result is constant, else
-    ("cmp", op, int_bound) with the bound saturated to int32 range.
+    ("cmp", op, int_bound) with the bound saturated to the column's
+    ``bits``-wide signed integer range.
     """
     import math
 
@@ -308,7 +348,7 @@ def fold_int_cmp(op: str, v: float):
         return ("all", True)
     # c < 10.5 ⟺ c < 11;  c <= 10.5 ⟺ c <= 10;  etc.
     b = math.ceil(v) if op in ("<", ">=") else math.floor(v)
-    lo, hi = -(2 ** 31), 2 ** 31 - 1
+    lo, hi = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
     if b < lo:
         return ("all", op in (">", ">="))
     if b > hi:
@@ -323,6 +363,9 @@ def pretty(e: Expr) -> str:
         lhs = e.col.name if isinstance(e.col, Col) else repr(e.col.value)
         rhs = e.rhs.name if isinstance(e.rhs, Col) else repr(e.rhs.value)
         return f"{lhs}{e.op}{rhs}"
+    if isinstance(e, In):
+        vals = ",".join(repr(v) for v in e.values)
+        return f"{e.col.name} in [{vals}]"
     if isinstance(e, And):
         return "(" + " & ".join(pretty(p) for p in e.parts) + ")"
     if isinstance(e, Or):

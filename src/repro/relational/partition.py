@@ -283,6 +283,14 @@ def _part_maybe(e: E.Expr, stats: Dict[str, PartColStats],
             _, op, v = folded
         return _interval_cmp(op, cs.vmin, cs.vmax,
                              _cast_lit(v, is_int), want_all)
+    if isinstance(e, E.In):
+        # membership = disjunction of equalities over the value list
+        # (empty lists canonicalize away, but stay safe here anyway)
+        if not e.values:
+            return False    # no row can satisfy membership in ()
+        ors = E.Or(tuple(E.Cmp("==", e.col, E.Lit(v)) for v in e.values)) \
+            if len(e.values) > 1 else E.Cmp("==", e.col, E.Lit(e.values[0]))
+        return _part_maybe(ors, stats, info, pid, want_all)
     if isinstance(e, E.And):
         # both modes distribute conjunction as ∀/∃-safe `all` / the
         # over-approximation "every conjunct may hold somewhere"

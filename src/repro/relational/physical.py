@@ -101,6 +101,13 @@ class ExecMetrics:
     bytes_cached_read: int = 0
     bytes_scan_cache_read: int = 0
     rows_processed: int = 0
+    # plan-shape compile cache: hits reuse a jitted fused pipeline keyed
+    # by canonical plan shape (literals slotted out); misses traced one
+    trace_hits: int = 0
+    trace_misses: int = 0
+    # window batching: shared dispatches and the queries they covered
+    batched_dispatches: int = 0
+    batched_queries: int = 0
     op_seconds: Dict[str, float] = field(default_factory=dict)
 
     def add_time(self, op: str, dt: float):
@@ -144,6 +151,11 @@ class ExecContext:
     # partitions whose statistics refute the predicate (conservative —
     # disable to force the unpruned path, e.g. for bit-identity tests)
     prune: bool = True
+    # plan-shape compile cache: route fused filters through SLOTTED
+    # predicate programs (literals hoisted into operand arrays) so
+    # recurring templates with fresh constants never re-trace; disable
+    # to force the legacy literal-keyed jit path
+    shape_cache: bool = True
     # strict cache key -> PartitionedCePlan for every partition-grained
     # CE this window selected: reads compose resident partitions from
     # the cache with per-partition recomputation of the cold ones
@@ -216,6 +228,7 @@ class ExecContext:
             fuse=cfg.fuse,
             defer_sync=cfg.defer_sync,
             prune=getattr(cfg, "prune", True),
+            shape_cache=getattr(cfg, "shape_cache", True),
             cost_model=cost_model,
             scan_cache=scan_cache,
             faults=getattr(cfg, "fault_injector", None))
@@ -263,6 +276,19 @@ def _cached(key, builder):
     return fn
 
 
+def _shape_cached(ctx: "ExecContext", key, builder):
+    """``_cached`` variant for plan-SHAPE keys (literals slotted out),
+    with hit/miss accounting: a miss here is a fresh trace of a fused
+    pipeline; a hit means a recurring template reused the jitted fn."""
+    fn = _FN_CACHE.get(key)
+    if fn is None:
+        ctx.metrics.trace_misses += 1
+        fn = _FN_CACHE[key] = builder()
+    else:
+        ctx.metrics.trace_hits += 1
+    return fn
+
+
 @partial(jax.jit, static_argnames=("new_cap",))
 def _compact(mask: jnp.ndarray, new_cap: int, *cols):
     """Bring mask-selected rows to the front; slice to new_cap."""
@@ -271,8 +297,7 @@ def _compact(mask: jnp.ndarray, new_cap: int, *cols):
     return tuple(jnp.take(c, sel, axis=0) for c in cols)
 
 
-@partial(jax.jit, static_argnames=("new_cap",))
-def _compact_nz(mask: jnp.ndarray, new_cap: int, *cols):
+def _compact_nz_impl(mask: jnp.ndarray, new_cap: int, *cols):
     """O(n) compaction via nonzero (vs the argsort in ``_compact``).
 
     ``nonzero`` returns selected row indices in ascending order — the
@@ -286,14 +311,36 @@ def _compact_nz(mask: jnp.ndarray, new_cap: int, *cols):
     return tuple(jnp.take(c, sel, axis=0) for c in cols)
 
 
+_compact_nz = partial(jax.jit, static_argnames=("new_cap",))(
+    _compact_nz_impl)
+# overflow-recompact variant: donates the mask buffer so the re-dispatch
+# can reuse its device memory (meaningful on tpu/gpu; no-op on cpu,
+# where jax warns, so the call site gates on backend)
+_compact_nz_donated = partial(jax.jit, static_argnames=("new_cap",),
+                              donate_argnums=(0,))(_compact_nz_impl)
+
+_DONATE_OK: Optional[bool] = None
+
+
+def _donate_ok() -> bool:
+    global _DONATE_OK
+    if _DONATE_OK is None:
+        _DONATE_OK = jax.default_backend() in ("tpu", "gpu")
+    return _DONATE_OK
+
+
+def _sort_sentinel(k: jnp.ndarray):
+    """Dtype-matched +inf analog for masking padding rows before a sort
+    (int32 AND int64 keys get their exact integer max, not a float)."""
+    if jnp.issubdtype(k.dtype, jnp.integer):
+        return jnp.asarray(jnp.iinfo(k.dtype).max, k.dtype)
+    return jnp.asarray(jnp.inf, k.dtype)
+
+
 @partial(jax.jit, static_argnames=("asc_sentinel",))
 def _sort_order(key: jnp.ndarray, nrows, asc_sentinel: bool):
     valid = jnp.arange(key.shape[0]) < nrows
-    if key.dtype == jnp.int32:
-        sent = jnp.int32(2**31 - 1)
-        k = jnp.where(valid, key, sent)
-    else:
-        k = jnp.where(valid, key, jnp.inf)
+    k = jnp.where(valid, key, _sort_sentinel(key))
     return jnp.argsort(k, stable=True)
 
 
@@ -328,8 +375,7 @@ def _join_expand(lo, m, out_cap):
 def _agg_seg_ids(nrows, *keys):
     n = keys[0].shape[0]
     valid = jnp.arange(n) < nrows
-    sk = [jnp.where(valid, k, I32_SENTINEL if k.dtype == jnp.int32
-                    else jnp.inf) for k in keys]
+    sk = [jnp.where(valid, k, _sort_sentinel(k)) for k in keys]
     order = jnp.lexsort(tuple(reversed(sk)))
     sorted_valid = jnp.take(valid, order)
     sorted_keys = [jnp.take(k, order) for k in sk]
@@ -582,7 +628,8 @@ def _est_cap(est: int, upper: int) -> int:
     return max(1, min(cap, next_pow2(max(upper, 1))))
 
 
-def _deferred_dispatch(dispatch, est: int, upper: int, count):
+def _deferred_dispatch(dispatch, est: int, upper: int, count,
+                       final_dispatch=None):
     """The deferred-sync pattern, shared by filter/join/aggregate and
     the fused pipeline: dispatch at the estimate-sized capacity BEFORE
     the host reads the true count, validate, and re-dispatch at the
@@ -598,6 +645,11 @@ def _deferred_dispatch(dispatch, est: int, upper: int, count):
     admitted to the CE cache at its padded nbytes, evicting entries the
     knapsack believed would fit.
 
+    ``final_dispatch``, when given, runs the overflow/tighten re-dispatch
+    instead of ``dispatch`` — the fused path passes a buffer-DONATING
+    compaction there, since at that point the speculative output and the
+    mask are dead and their device memory can be reused.
+
     Returns (dispatch result, int count).
     """
     cap = _est_cap(est, upper)
@@ -605,7 +657,7 @@ def _deferred_dispatch(dispatch, est: int, upper: int, count):
     n = int(count)
     tight = next_pow2(max(n, 1))
     if n > cap or cap > 2 * tight:
-        out = dispatch(tight)
+        out = (final_dispatch or dispatch)(tight)
     return out, n
 
 
@@ -778,10 +830,7 @@ def _sort_fn(key, by_idx: int, in_cap: int, new_cap: int, desc: bool):
         valid = jnp.arange(in_cap) < nrows
         if desc:
             k = -k
-        if k.dtype == jnp.int32:
-            k = jnp.where(valid, k, I32_SENTINEL)
-        else:
-            k = jnp.where(valid, k, jnp.inf)
+        k = jnp.where(valid, k, _sort_sentinel(k))
         sel = jnp.argsort(k, stable=True)[:new_cap]
         return tuple(jnp.take(c, sel, axis=0) for c in cols)
 
@@ -816,12 +865,8 @@ def _exec_sort(node: L.Sort, child: Table, ctx: ExecContext) -> Table:
     # seed eager path: full-capacity order, one gather per column
     key = child.columns[node.by]
     if node.desc:
-        if key.dtype == jnp.int32:
-            key = jnp.where(jnp.arange(child.capacity) < child.nrows,
-                            -key, I32_SENTINEL)
-        else:
-            key = jnp.where(jnp.arange(child.capacity) < child.nrows,
-                            -key, jnp.inf)
+        key = jnp.where(jnp.arange(child.capacity) < child.nrows,
+                        -key, _sort_sentinel(key))
         order = jnp.argsort(key, stable=True)
     else:
         order = _sort_order(key, jnp.int32(child.nrows), True)
@@ -894,7 +939,7 @@ def _try_pallas_filter(pred: E.Expr, child: Table):
     from ..kernels.filter_project.ops import compile_predicate, filter_mask
 
     numeric = tuple(n for n, t in child.schema.fields
-                    if t.kind in ("i32", "f32"))
+                    if t.kind in ("i32", "i64", "f32"))
     try:
         program = compile_predicate(pred, numeric)
     except (ValueError, KeyError):
@@ -983,6 +1028,81 @@ def _fused_fn(key, pred: E.Expr, in_names: Tuple[str, ...],
     return jax.jit(f)
 
 
+def _slot_compile(pred: E.Expr, schema):
+    """Slotted compile of ``pred`` over the schema's numeric predicate
+    columns.  Returns (program, ivals, fvals, names) or None when the
+    predicate falls off the slotted route (string compares, col-col over
+    strings, out-of-range consts...)."""
+    from ..kernels.filter_project.ops import compile_predicate_slots
+
+    kinds = {n: t.kind for n, t in schema.fields}
+    pcols = E.columns_of(pred)
+    names = tuple(n for n in schema.names
+                  if n in pcols and kinds[n] in ("i32", "i64", "f32"))
+    if not names:
+        return None
+    try:
+        program, ivals, fvals = compile_predicate_slots(pred, names, kinds)
+    except (ValueError, KeyError):
+        return None
+    return program, ivals, fvals, names
+
+
+def _slotted_mask(pred: E.Expr, child: Table, ctx: ExecContext,
+                  use_pallas: bool):
+    """Per-query mask+count through the SLOTTED program route: the
+    jitted fn is keyed by plan shape (literals live in operand arrays),
+    so recurring templates with fresh constants never re-trace.  This is
+    exactly a batch of one — bit-identical to a window-batched dispatch
+    of the same plan.  Returns (mask, count) or (None, None)."""
+    from ..kernels.filter_project.ops import filter_mask_batch, pack_consts
+
+    compiled = _slot_compile(pred, child.schema)
+    if compiled is None:
+        return None, None
+    program, ivals, fvals, names = compiled
+    ic, fc = pack_consts([ivals], [fvals])
+    block = min(2048, child.capacity)
+    key = ("slotmask", program, names, 1, child.capacity, block,
+           use_pallas)
+    fn = _shape_cached(ctx, key, lambda: partial(
+        filter_mask_batch, block=block, use_pallas=use_pallas))
+    cols = tuple(child.columns[n] for n in names)
+    mask, counts = fn(cols, program, jnp.int32(child.nrows), ic, fc)
+    return mask[0], jnp.sum(counts)
+
+
+def _fused_est(src, pred: E.Expr, child: Table, est_rows: Optional[int],
+               ctx: ExecContext) -> Optional[int]:
+    """The fused pipeline's deferred-sync output-capacity estimate
+    (shared verbatim by the per-query and window-batched routes, so a
+    batched member sizes its compaction exactly like a solo run)."""
+    est = ctx.estimate("filter", pred,
+                       est_rows if est_rows is not None else child.nrows)
+    if est is not None and est_rows is not None:
+        est = min(est, child.nrows)
+    if (est is not None and isinstance(src, L.Scan)
+            and src.parts is not None):
+        # partition-RESTRICTED scan (per-partition CE recompute): the
+        # restriction exists because the covering predicate keeps these
+        # partitions, so whole-table selectivity applied to partition
+        # rows systematically undershoots (range partitioning on the
+        # filter column is the worst case: every row passes) — forcing
+        # the overflow re-dispatch on the warm recompute path.  Size at
+        # the partition input; the overshoot guard recompacts the rare
+        # genuinely-selective case.
+        est = child.nrows
+    if est is not None and isinstance(src, L.CachedScan):
+        # residual over a covering relation: condition on the covering
+        # plan's selectivity (the CE output already passed the OR of
+        # member predicates, so base-table selectivities undershoot)
+        cov = ctx.cache_plans.get(src.psi)
+        sel_fn = getattr(ctx.cost_model, "plan_selectivity", None)
+        if cov is not None and sel_fn is not None:
+            est = min(child.nrows, int(est / sel_fn(cov)))
+    return est
+
+
 def _exec_fused(node: FusedPipeline, ctx: ExecContext) -> Table:
     # covers the Pallas and fused-XLA routes; the eager per-operator
     # path (the degradation ladder's bottom rung) never dispatches here
@@ -1021,49 +1141,45 @@ def _exec_fused(node: FusedPipeline, ctx: ExecContext) -> Table:
 
     in_names = child.schema.names
     in_cols = [child.columns[n] for n in in_names]
-    est = ctx.estimate("filter", pred,
-                       est_rows if est_rows is not None else child.nrows)
-    if est is not None and est_rows is not None:
-        est = min(est, child.nrows)
-    if (est is not None and isinstance(src, L.Scan)
-            and src.parts is not None):
-        # partition-RESTRICTED scan (per-partition CE recompute): the
-        # restriction exists because the covering predicate keeps these
-        # partitions, so whole-table selectivity applied to partition
-        # rows systematically undershoots (range partitioning on the
-        # filter column is the worst case: every row passes) — forcing
-        # the overflow re-dispatch on the warm recompute path.  Size at
-        # the partition input; the overshoot guard recompacts the rare
-        # genuinely-selective case.
-        est = child.nrows
-    if est is not None and isinstance(src, L.CachedScan):
-        # residual over a covering relation: condition on the covering
-        # plan's selectivity (the CE output already passed the OR of
-        # member predicates, so base-table selectivities undershoot)
-        cov = ctx.cache_plans.get(src.psi)
-        sel_fn = getattr(ctx.cost_model, "plan_selectivity", None)
-        if cov is not None and sel_fn is not None:
-            est = min(child.nrows, int(est / sel_fn(cov)))
+    est = _fused_est(src, pred, child, est_rows, ctx)
     out_schema = node.schema
 
     mask = count = None
     if ctx.use_pallas_filter:
         # kernel computes mask+count; only the data-dependent-shape
-        # compaction stays in XLA (see kernels.filter_project.kernel)
-        mask, count = _try_pallas_filter(pred, child)
+        # compaction stays in XLA (see kernels.filter_project.kernel).
+        # Shape-cached slotted program first (no re-trace on fresh
+        # literals), legacy literal program as fallback.
+        if ctx.shape_cache:
+            mask, count = _slotted_mask(pred, child, ctx, use_pallas=True)
+        if mask is None:
+            mask, count = _try_pallas_filter(pred, child)
     if mask is None:
         # multi-device row sharding: predicate evaluation per shard
         # under shard_map (no communication except the count psum)
         mask, count = _try_shard_map_mask(pred, child, ctx)
+    if mask is None and ctx.shape_cache:
+        # fused-XLA slotted route: same shape-keyed program, evaluated
+        # by the jitted batch oracle instead of the Pallas kernel
+        mask, count = _slotted_mask(pred, child, ctx, use_pallas=False)
 
     def project_compact(new_cap: int):
         return _compact_nz(mask, new_cap,
                            *[child.columns[c] for c in node.cols])
 
+    def final_compact(new_cap: int):
+        # overflow/tighten re-dispatch: the mask is dead afterwards, so
+        # donate its buffer where the backend supports donation
+        if _donate_ok():
+            return _compact_nz_donated(
+                mask, new_cap, *[child.columns[c] for c in node.cols])
+        return project_compact(new_cap)
+
     if mask is not None:
         if est is not None:
             outs, count = _deferred_dispatch(
-                project_compact, est, child.capacity, count)
+                project_compact, est, child.capacity, count,
+                final_dispatch=final_compact)
         else:
             count = int(count)
             outs = project_compact(next_pow2(max(count, 1)))
@@ -1080,7 +1196,7 @@ def _exec_fused(node: FusedPipeline, ctx: ExecContext) -> Table:
         tight = next_pow2(max(count, 1))
         if count > new_cap or new_cap > 2 * tight:
             # estimate overflow (or gross overshoot): recompact exactly
-            outs = project_compact(tight)
+            outs = final_compact(tight)
     else:
         # no estimator: two dispatches, but still no intermediate
         # relation — only the output columns are ever compacted
@@ -1092,6 +1208,211 @@ def _exec_fused(node: FusedPipeline, ctx: ExecContext) -> Table:
 
     ctx.metrics.rows_processed += child.nrows
     return Table(out_schema, dict(zip(node.cols, outs)), count)
+
+
+# ---------------------------------------------------------------------------
+# window-batched execution: same-shape fused pipelines -> ONE dispatch
+# ---------------------------------------------------------------------------
+@dataclass
+class _BatchMember:
+    """One window query admitted to a batched dispatch group."""
+    pos: int                      # caller's window position
+    node: FusedPipeline
+    src: L.Node                   # prune-resolved source leaf
+    need: frozenset               # scan columns (output + predicate)
+    est_rows: Optional[int]       # pre-prune row count for estimation
+    program: tuple                # slotted postfix program (the shape)
+    ivals: tuple
+    fvals: tuple
+    pred_names: Tuple[str, ...]   # numeric predicate columns, schema order
+
+
+def plan_window_batches(plans, ctx: ExecContext):
+    """Group a closed window's plans for batched kernel execution.
+
+    ``plans`` is a sequence of ``(pos, logical plan)`` pairs.  A plan is
+    batch-capable when it fuses to a FusedPipeline whose predicate
+    compiles to a slotted program; plans sharing (source leaf, program
+    shape, predicate columns) — i.e. literal variants of one template
+    over one table — land in the same group and will evaluate as ONE
+    batched mask dispatch.  Returns ``(n_candidates, groups)`` where
+    groups have >= 2 members (singletons stay on the per-query path) and
+    the cost model has priced the shared dispatch below per-query ones.
+    """
+    if not ctx.fuse or not ctx.shape_cache:
+        return 0, []
+    from dataclasses import replace as _dc_replace
+
+    buckets: Dict[tuple, list] = {}
+    n_cand = 0
+    for pos, plan in plans:
+        node = fuse_plan(L.as_node(plan))
+        if not isinstance(node, FusedPipeline):
+            continue
+        pred = node.pred
+        if isinstance(pred, E.TrueExpr):
+            continue
+        src = node.source
+        est_rows = None
+        if isinstance(src, L.Scan):
+            st = ctx.catalog.get(src.table)
+            if st is None:
+                continue
+            if (ctx.prune and src.parts is None
+                    and st.partitions is not None
+                    and st.partitions.n_partitions > 1):
+                # resolve pruning NOW so the group key reflects the
+                # actual scanned ranges (members with different live
+                # partition sets must not share a mask dispatch)
+                live = prune_parts(pred, st.partitions)
+                if len(live) < st.partitions.n_partitions:
+                    src = _dc_replace(src, parts=live)
+                    est_rows = st.nrows
+            leaf = ("scan", src.table, src.parts, st.fmt)
+        elif isinstance(src, L.CachedScan):
+            leaf = ("cs", src.psi)
+        else:
+            continue
+        compiled = _slot_compile(pred, src.schema)
+        if compiled is None:
+            continue
+        program, ivals, fvals, pred_names = compiled
+        n_cand += 1
+        key = (leaf, program, pred_names)
+        buckets.setdefault(key, []).append(_BatchMember(
+            pos=pos, node=node, src=src,
+            need=frozenset(node.cols) | E.columns_of(pred),
+            est_rows=est_rows, program=program, ivals=ivals,
+            fvals=fvals, pred_names=pred_names))
+
+    groups = []
+    wd = getattr(ctx.cost_model, "window_dispatch_cost", None) \
+        if ctx.cost_model is not None else None
+    for ms in buckets.values():
+        if len(ms) < 2:
+            continue
+        if wd is not None and wd(len(ms), batched=True) >= \
+                wd(len(ms), batched=False):
+            continue
+        groups.append(ms)
+    return n_cand, groups
+
+
+def _prepare_group(members, ctx: ExecContext):
+    """Phase one of a group: per-member scans + the ONE batched
+    mask/count dispatch (async — nothing here blocks on the device)."""
+    from ..kernels.filter_project.ops import filter_mask_batch, pack_consts
+
+    children = []
+    for m in members:
+        src = m.src
+        if isinstance(src, L.Scan):
+            needed = tuple(n for n in src.schema.names if n in m.need)
+            children.append(_exec_scan(src, ctx, needed))
+        else:
+            table = _cached_scan_table(src, ctx)
+            children.append(table.select(
+                [n for n in src.schema.names
+                 if n in m.need and table.schema.has(n)]))
+    base = children[0]
+    for ch in children[1:]:
+        if ch.capacity != base.capacity or ch.nrows != base.nrows:
+            raise RuntimeError("window-batch group children diverge")
+    names = members[0].pred_names
+    # predicate columns come from the FIRST member's child — same leaf,
+    # same device buffers (scan cache), so no member pays a second scan
+    cols = tuple(base.columns[n] for n in names)
+    ic, fc = pack_consts([m.ivals for m in members],
+                         [m.fvals for m in members])
+    block = min(2048, base.capacity)
+    use_pallas = ctx.use_pallas_filter
+    key = ("slotmask", members[0].program, names, len(members),
+           base.capacity, block, use_pallas)
+    fn = _shape_cached(ctx, key, lambda: partial(
+        filter_mask_batch, block=block, use_pallas=use_pallas))
+    mask, counts = fn(cols, members[0].program, jnp.int32(base.nrows),
+                      ic, fc)
+    ctx.metrics.batched_dispatches += 1
+    ctx.metrics.batched_queries += len(members)
+    return children, mask, counts
+
+
+def _finalize_group(members, prep, ctx: ExecContext):
+    """Phase two: blocking count reads + per-member deferred-sync
+    compactions (identical sizing to the solo ``_exec_fused`` path, so
+    batched results are bit-identical to per-query dispatch)."""
+    children, mask, counts = prep
+    outs = []
+    for q, (m, child) in enumerate(zip(members, children)):
+        est = _fused_est(m.src, m.node.pred, child, m.est_rows, ctx)
+        mrow = mask[q]
+        crow = jnp.sum(counts[q])
+
+        def project_compact(new_cap, mrow=mrow, child=child, m=m):
+            return _compact_nz(mrow, new_cap,
+                               *[child.columns[c] for c in m.node.cols])
+
+        def final_compact(new_cap, mrow=mrow, child=child, m=m,
+                          project_compact=project_compact):
+            if _donate_ok():
+                return _compact_nz_donated(
+                    mrow, new_cap,
+                    *[child.columns[c] for c in m.node.cols])
+            return project_compact(new_cap)
+
+        if est is not None:
+            cols_out, count = _deferred_dispatch(
+                project_compact, est, child.capacity, crow,
+                final_dispatch=final_compact)
+        else:
+            count = int(crow)
+            cols_out = project_compact(next_pow2(max(count, 1)))
+        ctx.metrics.rows_processed += child.nrows
+        outs.append(Table(m.node.schema,
+                          dict(zip(m.node.cols, cols_out)), count))
+    return outs
+
+
+def execute_window_batched(groups, ctx: ExecContext):
+    """Run planned groups: phase one dispatches EVERY group's scans and
+    batched mask kernels before phase two reads any count — JAX's async
+    dispatch overlaps the remaining host-side pad/copy work with device
+    compute already in flight.  A failing group degrades whole (its
+    members return to the caller's per-query path); per-member results
+    carry an even split of the group's wall time.
+
+    Returns ``(results {pos: Table}, seconds {pos: float},
+    failures {pos: Exception})``.
+    """
+    results: Dict[int, Table] = {}
+    seconds: Dict[int, float] = {}
+    failures: Dict[int, Exception] = {}
+    prepped = []
+    for g in groups:
+        t0 = time.perf_counter()
+        try:
+            prepped.append((g, _prepare_group(g, ctx),
+                            time.perf_counter() - t0))
+        except Exception as exc:
+            for m in g:
+                failures[m.pos] = exc
+    for g, prep, dt0 in prepped:
+        t0 = time.perf_counter()
+        try:
+            outs = _finalize_group(g, prep, ctx)
+            for t in outs:
+                jax.block_until_ready(list(t.columns.values()))
+        except Exception as exc:
+            for m in g:
+                failures[m.pos] = exc
+            continue
+        dt = dt0 + (time.perf_counter() - t0)
+        ctx.metrics.add_time("fused", dt)
+        per = dt / len(g)
+        for m, t in zip(g, outs):
+            results[m.pos] = t
+            seconds[m.pos] = per
+    return results, seconds, failures
 
 
 # ---------------------------------------------------------------------------

@@ -7,6 +7,8 @@ analog: each operator materializes a fixed-shape distributed relation).
 
 Column types:
   * ``i32``  — int32 scalar column, shape (capacity,)
+  * ``i64``  — int64 scalar column, shape (capacity,); columnar-only
+    (the fixed-width CSV parser is 10-digit/i32) and requires JAX x64
   * ``f32``  — float32 scalar column, shape (capacity,)
   * ``str``  — fixed-width UTF-8 bytes, shape (capacity, width) uint8
 """
@@ -21,28 +23,33 @@ import numpy as np
 
 @dataclass(frozen=True)
 class ColType:
-    kind: str            # "i32" | "f32" | "str"
+    kind: str            # "i32" | "i64" | "f32" | "str"
     width: int = 0       # for "str": fixed byte width
 
     def __post_init__(self):
-        assert self.kind in ("i32", "f32", "str")
+        assert self.kind in ("i32", "i64", "f32", "str")
         if self.kind == "str":
             assert self.width > 0
 
     @property
     def mem_bytes(self) -> int:
         """In-memory bytes per value (the cache-weight unit)."""
-        return {"i32": 4, "f32": 4, "str": self.width}[self.kind]
+        return {"i32": 4, "i64": 8, "f32": 4,
+                "str": self.width}[self.kind]
 
     @property
     def csv_width(self) -> int:
         """Fixed-width CSV-analog serialized byte width per value."""
         # i32: 10 zero-padded digits (values < 1e9); f32 in [0,1):
         # "0." + 8 digits -> we store just the 8 fractional digits.
+        # i64 has no CSV encoding — int64 columns are columnar-only.
+        if self.kind == "i64":
+            raise ValueError("i64 columns have no CSV encoding")
         return {"i32": 10, "f32": 8, "str": self.width}[self.kind]
 
 
 I32 = ColType("i32")
+I64 = ColType("i64")
 F32 = ColType("f32")
 
 
@@ -173,6 +180,8 @@ def empty_like(schema: Schema, capacity: int) -> Dict[str, jnp.ndarray]:
     for n, t in schema.fields:
         if t.kind == "i32":
             cols[n] = jnp.zeros((capacity,), jnp.int32)
+        elif t.kind == "i64":
+            cols[n] = jnp.zeros((capacity,), jnp.int64)
         elif t.kind == "f32":
             cols[n] = jnp.zeros((capacity,), jnp.float32)
         else:

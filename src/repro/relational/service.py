@@ -102,6 +102,14 @@ class ExecutionConfig:
     # fused pipelines skip partitions whose statistics refute the
     # predicate.  False forces the unpruned path (bit-identity tests).
     prune: bool = True
+    # window batching: execute a closed window's same-shape fused
+    # pipelines as ONE batched mask dispatch (PR 7).  False keeps
+    # per-query dispatch (the baseline the bench compares against).
+    window_batch: bool = True
+    # plan-shape compile cache: slotted predicate programs keyed by
+    # plan SHAPE (literals hoisted to operand arrays) so recurring
+    # templates never re-trace.  False forces literal-keyed jit.
+    shape_cache: bool = True
     sharding: Optional[Any] = None          # jax.sharding.Sharding
     disk_latency_per_byte: float = 0.0
 
@@ -663,7 +671,17 @@ class QueryService:
 
         t0 = time.perf_counter()
         results: List[Optional[Any]] = [None] * n
+        # window batching (PR 7): same-shape fused pipelines in the
+        # window execute as ONE batched mask dispatch; everything else
+        # (and every batch failure) falls through to the per-query loop
+        batched_done: Set[int] = set()
+        shared_dispatch: Dict[int, List[int]] = {}
+        if getattr(sess, "window_batch", True) and len(live) >= 2:
+            batched_done, shared_dispatch = self._exec_batched(
+                sess, ctx, live, executed, results, events)
         for i in live:
+            if i in batched_done:
+                continue
             try:
                 results[i] = sess.run_one_resilient(
                     executed[i], ctx, query=i, events=events[i])
@@ -713,15 +731,81 @@ class QueryService:
         self._resolve(handles, batch, window, mqo=bool(mqo), k=k,
                       executed_plans=executed, ce_by_key=ce_by_key,
                       pre_resident=pre_resident, errors=errors,
-                      events=events, ctx=ctx)
+                      events=events, ctx=ctx,
+                      shared_dispatch=shared_dispatch)
         return batch
+
+    @staticmethod
+    def _exec_batched(sess, ctx, live, executed, results, events):
+        """Window-batched execution step: plan same-shape dispatch
+        groups over the window's live plans and run each group as ONE
+        batched kernel call.  Returns ``(done positions, {position:
+        sorted positions sharing its dispatch})``.  Any failure — the
+        ``batched_launch`` fault point, a diverging group, a kernel
+        error — degrades the affected queries back to the per-query
+        loop (the PR 6 ladder handles them from there); results are
+        bit-identical either way, so degradation is invisible to
+        callers."""
+        from .executor import QueryResult
+        from .physical import (CEMaterializationError,
+                               execute_window_batched,
+                               plan_window_batches)
+
+        done: Set[int] = set()
+        shared: Dict[int, List[int]] = {}
+        try:
+            n_cand, groups = plan_window_batches(
+                [(i, executed[i]) for i in live], ctx)
+        except Exception:
+            # planning must never take the window down — worst case
+            # everything stays on the per-query path
+            return done, shared
+        if n_cand < 2:
+            return done, shared
+        # the shared dispatch is a named fault point: one check per
+        # window with batchable candidates, BEFORE any group runs, so
+        # an injected fault degrades the whole window to per-query
+        # dispatch without consuming any per-query fault draws
+        try:
+            ctx.check_fault("batched_launch")
+        except InjectedFault as exc:
+            for g in groups:
+                for m in g:
+                    events[m.pos].append(DegradationEvent(
+                        query=m.pos, attempt=1, action="degrade",
+                        level="per-query", error=repr(exc)))
+            return done, shared
+        if not groups:
+            return done, shared
+        tables, seconds, failures = execute_window_batched(groups, ctx)
+        for g in groups:
+            poss = sorted(m.pos for m in g)
+            for m in g:
+                if m.pos not in tables:
+                    continue
+                results[m.pos] = QueryResult(
+                    table=tables[m.pos], seconds=seconds[m.pos],
+                    plan=executed[m.pos])
+                done.add(m.pos)
+                shared[m.pos] = poss
+        for pos, exc in failures.items():
+            if isinstance(exc, CEMaterializationError):
+                # poisoned CE: the per-query loop's residual fallback
+                # owns this case — not a batching degradation
+                continue
+            events[pos].append(DegradationEvent(
+                query=pos, attempt=1, action="degrade",
+                level="per-query", error=repr(exc)))
+        return done, shared
 
     def _resolve(self, handles, batch, window, *, mqo, k,
                  executed_plans, ce_by_key, pre_resident,
-                 errors=None, events=None, ctx=None) -> None:
+                 errors=None, events=None, ctx=None,
+                 shared_dispatch=None) -> None:
         n = len(handles)
         errors = errors or {}
         events = events or {}
+        shared_dispatch = shared_dispatch or {}
         for i, (h, qr) in enumerate(zip(handles, batch.results)):
             if h._done:
                 continue
@@ -734,7 +818,8 @@ class QueryService:
                 continue
             h._resolve(qr, _LazyExplain(
                 h, qr, window, i, n, bool(mqo), k,
-                executed_plans[i], ce_by_key, pre_resident))
+                executed_plans[i], ce_by_key, pre_resident,
+                shared_dispatch.get(i)))
 
     @staticmethod
     def _failure_state(handle, exc, window, position, n, events, plan,
@@ -809,10 +894,12 @@ class _LazyExplain:
     builds the report dict on first ``handle.explain()`` call."""
 
     __slots__ = ("handle", "qr", "window", "position", "window_size",
-                 "mqo", "k", "executed_plan", "ce_by_key", "pre_resident")
+                 "mqo", "k", "executed_plan", "ce_by_key", "pre_resident",
+                 "shared_dispatch")
 
     def __init__(self, handle, qr, window, position, window_size, mqo, k,
-                 executed_plan, ce_by_key, pre_resident):
+                 executed_plan, ce_by_key, pre_resident,
+                 shared_dispatch=None):
         self.handle = handle
         self.qr = qr
         self.window = window
@@ -823,6 +910,10 @@ class _LazyExplain:
         self.executed_plan = executed_plan
         self.ce_by_key = ce_by_key
         self.pre_resident = pre_resident
+        # window positions whose queries shared ONE batched mask
+        # dispatch with this one (includes this position); None when
+        # the query ran on the per-query path
+        self.shared_dispatch = shared_dispatch
 
     def __call__(self) -> dict:
         ce_reports = []
@@ -849,7 +940,7 @@ class _LazyExplain:
                     "admitted": sorted(ce.admitted_partitions or ()),
                 }
             ce_reports.append(entry)
-        return {
+        out = {
             "status": "done",
             "window": self.window,
             "position": self.position,
@@ -861,6 +952,9 @@ class _LazyExplain:
             "ces": ce_reports,
             "resident_reuse": any(c["cache_hit"] for c in ce_reports),
         }
+        if self.shared_dispatch:
+            out["shared_dispatch"] = list(self.shared_dispatch)
+        return out
 
 
 def _cached_scan_keys(plan: L.Node) -> List[bytes]:

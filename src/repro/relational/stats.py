@@ -185,6 +185,11 @@ def selectivity(e: E.Expr, reg: StatsRegistry) -> float:
         if isinstance(v, (bytes, str)):
             return 1.0 / 3.0
         return float(np.clip(_range_fraction(cs, e.op, float(v)), 0.0, 1.0))
+    if isinstance(e, E.In):
+        # membership over k values ~ k distinct-value equality probes
+        cs = reg.col(e.col.name)
+        ndv = max(cs.ndv, 1) if cs is not None else 100
+        return min(1.0, len(e.values) / ndv)
     if isinstance(e, E.And):
         s = 1.0
         for p in e.parts:
@@ -261,6 +266,10 @@ class CostConstants:
     # per-operator intermediate relation and host sync, so a residual
     # term is cheaper than an eager one (calibratable like the rest)
     fused_cmp: float = 0.6e-9
+    # fixed per-kernel-launch overhead (host->device trip + program
+    # setup), used to price a window's shared batched dispatch against
+    # per-query dispatches
+    dispatch: float = 3.0e-6
 
 
 class RelationalCostModel:
@@ -449,6 +458,16 @@ class RelationalCostModel:
         sizing (ROADMAP open item: deferred sync for Union)."""
         return max(1, int(l_rows) + int(r_rows))
 
+    def window_dispatch_cost(self, n_queries: int, batched: bool) -> float:
+        """Dispatch-overhead price of executing ``n_queries`` same-shape
+        fused pipelines: batched = one shared mask launch + one
+        compaction per query; per-query = a mask launch AND a compaction
+        per query.  Data movement is identical either way (same scan,
+        same output rows), so only launch overheads differ."""
+        if batched:
+            return (1 + n_queries) * self.c.dispatch
+        return 2 * n_queries * self.c.dispatch
+
     def sort_estimate(self, in_rows: int) -> int:
         """Sort preserves cardinality, so the estimate is exact; it
         exists so the fused sort path sizes its output from the input
@@ -468,6 +487,8 @@ class RelationalCostModel:
 def _n_terms(e: E.Expr) -> int:
     if isinstance(e, E.Cmp):
         return 1
+    if isinstance(e, E.In):
+        return max(1, len(e.values))
     if isinstance(e, (E.And, E.Or)):
         return sum(_n_terms(p) for p in e.parts)
     if isinstance(e, E.Not):

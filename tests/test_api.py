@@ -59,14 +59,23 @@ class TestColumnExpressions:
         assert got == want
 
     def test_isin_between(self):
-        assert ((c.a.isin([1, 2])).expr
-                == E.or_(E.cmp("a", "==", 1), E.cmp("a", "==", 2)))
+        # isin builds the first-class membership node (one kernel
+        # opcode); canonicalization dedups + sorts the value set and
+        # folds a singleton down to a plain compare
+        from repro.relational import canonicalize_expr
+        assert (c.a.isin([2, 1])).expr == E.In(E.Col("a"), (2, 1))
+        assert (canonicalize_expr(c.a.isin([2, 1, 2]).expr)
+                == E.In(E.Col("a"), (1, 2)))
+        assert (canonicalize_expr(c.a.isin([7]).expr)
+                == E.cmp("a", "==", 7))
         assert ((c.a.between(3, 7)).expr
                 == E.and_(E.cmp("a", ">=", 3), E.cmp("a", "<=", 7)))
 
     def test_isin_empty_is_false_and_executes(self):
-        # review fix: isin([]) used to build an invalid empty Or(())
-        assert (c.a.isin([])).expr == E.Not(E.TRUE)
+        # empty membership canonicalizes to FALSE and returns no rows
+        from repro.relational import canonicalize_expr
+        assert (c.a.isin([])).expr == E.In(E.Col("a"), ())
+        assert canonicalize_expr(c.a.isin([]).expr) == E.Not(E.TRUE)
         sess, _ = _mk_session()
         out = sess.run_one(
             sess.table("t").where(c.a.isin([])).select("a"))

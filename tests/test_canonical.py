@@ -406,3 +406,73 @@ class TestCrossWindowSharing:
                 ex = hx.explain()
                 assert {ce["strict_psi"] for ce in ex["ces"]} == want
                 assert ex["resident_reuse"]
+
+
+class TestPlanShapeKeys:
+    """Satellite (ISSUE 7): the plan-shape compile cache keys slotted
+    programs by predicate SHAPE.  Properties: (i) every literal variant
+    of one template compiles to ONE program (the shape key), with only
+    the hoisted operand values differing; (ii) structurally different
+    templates never collide onto one program; (iii) across a
+    multi-window recurring stream the trace cache misses only in the
+    first window."""
+
+    KINDS = {"a": "i32", "b": "i32", "d": "i32"}
+
+    def _slots(self, pred):
+        from repro.kernels.filter_project.ops import compile_predicate_slots
+        return compile_predicate_slots(
+            canonicalize_expr(pred), COLS, self.KINDS)
+
+    def test_literal_variants_one_shape_key(self):
+        rng = random.Random(1234)
+        templates = [
+            lambda x, y: E.and_(E.cmp("a", ">", x), E.cmp("b", "<", y)),
+            lambda x, y: E.or_(E.cmp("a", "==", x),
+                               E.and_(E.cmp("b", ">=", y),
+                                      E.cmp("d", "!=", x))),
+            lambda x, y: E.Not(E.and_(E.cmp("d", "<=", x),
+                                      E.cmp("a", "<", y))),
+        ]
+        for tpl in templates:
+            progs, operands = set(), set()
+            for _ in range(25):
+                x, y = rng.randint(0, 60), rng.randint(61, 100)
+                program, ivals, fvals = self._slots(tpl(x, y))
+                progs.add(program)
+                operands.add((ivals, fvals))
+            assert len(progs) == 1, "literal variants must share ONE shape"
+            assert len(operands) > 1, "literals must be hoisted, not baked"
+
+    def test_distinct_structures_never_collide(self):
+        structures = [
+            E.cmp("a", ">", 5),
+            E.cmp("a", ">=", 5),                      # different op
+            E.cmp("b", ">", 5),                       # different column
+            E.and_(E.cmp("a", ">", 5), E.cmp("b", "<", 9)),
+            E.or_(E.cmp("a", ">", 5), E.cmp("b", "<", 9)),
+            E.and_(E.cmp("a", ">", 5), E.cmp("b", "<", 9),
+                   E.cmp("d", "==", 2)),              # extra term
+            E.Not(E.cmp("a", "==", 5)),               # != after push-down
+            E.In(E.Col("a"), (2, 5, 9)),              # membership opcode
+            E.col_cmp("a", "<", "b"),                 # col-col compare
+        ]
+        progs = [self._slots(s)[0] for s in structures]
+        assert len(set(progs)) == len(progs), \
+            "structurally different predicates must map to distinct keys"
+
+    def test_trace_cache_hits_across_windows(self):
+        for window_batch in (True, False):
+            sess, _ = _mk_session(nrows=4000)
+            sess.window_batch = window_batch
+            for w in range(3):
+                qs = [sess.table("t")
+                      .where((c.a > 10 + 7 * i + w) & (c.b < 90 - i - w))
+                      .select("a", "b") for i in range(4)]
+                m = sess.run_batch(qs, mqo=False).metrics
+                if w == 0:
+                    assert m.trace_misses > 0       # cold window traces
+                else:
+                    assert m.trace_misses == 0, \
+                        (window_batch, w, m.trace_misses)
+                    assert m.trace_hits > 0         # hit rate 1.0

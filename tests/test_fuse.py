@@ -414,3 +414,186 @@ class TestLocalOptimizerChains:
             catalog={"t": st}, fuse=False, defer_sync=False))
         fused = execute(opt, ExecContext(catalog={"t": st}))
         _assert_tables_bit_identical(eager, fused)
+
+
+class TestInListCoverage:
+    """Satellite (ISSUE 7): ``In``-list membership runs through the
+    postfix programs — every kernel route must match the eager/XLA
+    oracle bit for bit, including fractional and out-of-range list
+    values against integer columns."""
+
+    def _contexts(self, st, pallas):
+        return (
+            ExecContext(catalog={"t": st}),                     # slotted XLA
+            ExecContext(catalog={"t": st}, shape_cache=False),  # literal jit
+            ExecContext(catalog={"t": st}, use_pallas_filter=pallas),
+        )
+
+    @pytest.mark.parametrize("fmt", ["columnar", "csv"])
+    @pytest.mark.parametrize("pallas", [False, True])
+    def test_randomized_in_lists(self, fmt, pallas):
+        for case in range(4 if pallas else 8):
+            rng = np.random.default_rng(4000 + 10 * case + (fmt == "csv"))
+            nrows = int(rng.integers(3, 900))
+            st, cols = _toy(nrows=nrows, seed=case, fmt=fmt)
+            vals = tuple(int(v) for v in
+                         rng.integers(0, 20, int(rng.integers(1, 6))))
+            pred: E.Expr = E.In(E.Col("k"), vals)
+            in_only = not rng.integers(0, 2)
+            if not in_only:
+                pred = E.and_(pred, _random_pred(rng, {"k", "v", "x"}))
+            plan = L.scan("t", SCHEMA, fmt).filter(pred).project("k", "v")
+            eager = execute(plan, ExecContext(
+                catalog={"t": st}, fuse=False, defer_sync=False))
+            if in_only:      # numpy oracle for the membership itself
+                keep = np.isin(cols["k"], np.asarray(vals, np.int32))
+                assert eager.nrows == int(keep.sum())
+            for ctx in self._contexts(st, pallas):
+                _assert_tables_bit_identical(eager, execute(plan, ctx))
+
+    @pytest.mark.parametrize("pallas", [False, True])
+    def test_in_list_edge_values(self, pallas):
+        # fractional values never equal an int column; out-of-range
+        # values never equal; duplicates are harmless
+        st, cols = _toy(nrows=400, seed=5)
+        vals = (3, 3, 7.0, 7.5, 2**40, -2**40, 11)
+        plan = (L.scan("t", SCHEMA, "columnar")
+                .filter(E.In(E.Col("k"), vals)).project("k", "v"))
+        expect = np.isin(cols["k"], np.asarray([3, 7, 11], np.int32))
+        eager = execute(plan, ExecContext(
+            catalog={"t": st}, fuse=False, defer_sync=False))
+        assert eager.nrows == int(expect.sum())
+        for ctx in self._contexts(st, pallas):
+            _assert_tables_bit_identical(eager, execute(plan, ctx))
+
+
+class TestI64Coverage:
+    """Satellite (ISSUE 7): int64 columns (columnar-only, x64 mode)
+    through every filter route — values beyond 2^32 must compare
+    exactly (an f32/i32 downcast would collapse them)."""
+
+    def _i64_case(self, nrows, seed):
+        from repro.relational import I64
+        rng = np.random.default_rng(seed)
+        sch = Schema.of(("big", I64), ("v", I32))
+        cols = {
+            "big": rng.integers(1, 1 << 40, nrows).astype(np.int64),
+            "v": rng.integers(0, 1000, nrows).astype(np.int32),
+        }
+        st, _ = make_storage("t", sch, nrows, "columnar", cols=cols)
+        return sch, st, cols
+
+    @pytest.mark.parametrize("pallas", [False, True])
+    def test_i64_filter_matches_oracle(self, pallas):
+        from jax.experimental import enable_x64
+        with enable_x64():
+            for case in range(4):
+                sch, st, cols = self._i64_case(600, 6000 + case)
+                thr = int(np.median(cols["big"]))
+                pred = E.and_(E.cmp("big", ">", thr),
+                              E.cmp("v", "<", 700))
+                plan = (L.scan("t", sch, "columnar")
+                        .filter(pred).project("big", "v"))
+                expect = (cols["big"] > thr) & (cols["v"] < 700)
+                eager = execute(plan, ExecContext(
+                    catalog={"t": st}, fuse=False, defer_sync=False))
+                assert eager.nrows == int(expect.sum())
+                np.testing.assert_array_equal(
+                    np.sort(eager.to_numpy()["big"]),
+                    np.sort(cols["big"][expect]))
+                for ctx in (ExecContext(catalog={"t": st}),
+                            ExecContext(catalog={"t": st},
+                                        shape_cache=False),
+                            ExecContext(catalog={"t": st},
+                                        use_pallas_filter=pallas)):
+                    _assert_tables_bit_identical(eager, execute(plan, ctx))
+
+    def test_i64_in_list_exact_beyond_2_53(self):
+        from jax.experimental import enable_x64
+        # neighbors beyond 2^53 are indistinguishable even in f64 — the
+        # membership compare must stay integer-exact
+        from repro.relational import I64
+        base = (1 << 53) + 2
+        vals = np.array([base - 1, base, base + 1, 5], np.int64)
+        sch = Schema.of(("big", I64))
+        with enable_x64():
+            st, _ = make_storage("t", sch, len(vals), "columnar",
+                                 cols={"big": vals})
+            plan = (L.scan("t", sch, "columnar")
+                    .filter(E.In(E.Col("big"), (int(base),))))
+            for ctx in (ExecContext(catalog={"t": st}),
+                        ExecContext(catalog={"t": st}, fuse=False,
+                                    defer_sync=False)):
+                out = execute(plan, ctx)
+                assert out.nrows == 1
+                assert int(out.to_numpy()["big"][0]) == base
+
+
+class TestWindowBatchIdentity:
+    """Tentpole acceptance (ISSUE 7): a window executed as batched
+    shared dispatches is BIT-identical to per-query dispatch — over
+    both storage formats, both kernel routes, and mixed windows where
+    only a subset of the plans share a template."""
+
+    def _sessions(self, pallas):
+        out = []
+        for window_batch in (True, False):
+            sess = Session.from_config(SessionConfig().with_execution(
+                window_batch=window_batch, use_pallas_filter=pallas))
+            for name, seed in (("t", 21), ("r", 22)):
+                rng = np.random.default_rng(seed)
+                nrows = 800 if name == "t" else 500
+                cols = {
+                    "k": rng.integers(0, 20, nrows).astype(np.int32),
+                    "v": rng.integers(0, 1000, nrows).astype(np.int32),
+                    "x": rng.random(nrows).astype(np.float32),
+                    "s": rng.integers(97, 100, (nrows, 8)).astype(np.uint8),
+                }
+                st, _ = make_storage(name, SCHEMA, nrows, self.fmt,
+                                     cols=cols)
+                sess.register(st, columnar_for_stats=cols)
+            out.append(sess)
+        return out
+
+    def _mixed_window(self, sess, w):
+        """4 same-template plans over t (batchable), one different
+        shape over t, one over r — the batch group must contain exactly
+        the template members and leave the rest per-query."""
+        t = lambda: sess.table("t")
+        qs = [t().filter(E.and_(E.cmp("v", ">", 100 + 37 * i + 11 * w),
+                                E.cmp("v", "<", 950 - 13 * i)))
+              .project("k", "v") for i in range(4)]
+        qs.append(t().filter(E.cmp("x", "<", 0.5 + 0.01 * w))
+                  .project("k", "x"))
+        qs.append(sess.table("r").filter(E.cmp("k", "==", 3 + w))
+                  .project("k", "v"))
+        return qs
+
+    @pytest.mark.parametrize("fmt", ["columnar", "csv"])
+    @pytest.mark.parametrize("pallas", [False, True])
+    def test_mixed_window_bit_identical(self, fmt, pallas):
+        self.fmt = fmt
+        batched, perq = self._sessions(pallas)
+        for w in range(3):
+            rb = batched.run_batch(self._mixed_window(batched, w),
+                                   mqo=False)
+            rp = perq.run_batch(self._mixed_window(perq, w), mqo=False)
+            assert rb.metrics.batched_dispatches >= 1
+            assert rb.metrics.batched_queries == 4
+            for a, b in zip(rb.results, rp.results):
+                _assert_tables_bit_identical(a.table, b.table)
+
+    @pytest.mark.parametrize("fmt", ["columnar", "csv"])
+    def test_all_singletons_stay_per_query(self, fmt):
+        self.fmt = fmt
+        batched, perq = self._sessions(False)
+        t = lambda s: s.table("t")
+        mk = lambda s: [t(s).filter(E.cmp("v", ">", 500)).project("k"),
+                        t(s).filter(E.cmp("x", "<", 0.4)).project("x"),
+                        s.table("r").filter(E.cmp("k", "<", 9))
+                        .project("k", "v")]
+        rb = batched.run_batch(mk(batched), mqo=False)
+        rp = perq.run_batch(mk(perq), mqo=False)
+        assert rb.metrics.batched_dispatches == 0   # no shared template
+        for a, b in zip(rb.results, rp.results):
+            _assert_tables_bit_identical(a.table, b.table)

@@ -395,6 +395,55 @@ class TestDegradationLadder:
 
 
 # ---------------------------------------------------------------------------
+# batched-window dispatch fault (PR 7)
+# ---------------------------------------------------------------------------
+class TestBatchedLaunchFault:
+    """The window's SHARED batched dispatch is a new failure domain:
+    when its fault point fires, the whole window must degrade to
+    per-query dispatch (the rung ABOVE the PR 6 ladder) with results
+    bit-identical to the fault-free run."""
+
+    def _template(self, sess):
+        # three same-SHAPE plans so the window forms one batch group
+        t = lambda: sess.table("t")  # noqa: E731
+        return [t().filter(E.and_(E.cmp("a", ">", 20 + 10 * i),
+                                  E.cmp("a", "<", 95 - 5 * i)))
+                .project("a", "b") for i in range(3)]
+
+    def test_batched_launch_degrades_to_per_query(self):
+        ref = _mk_session()
+        base = ref.run_batch(self._template(ref), mqo=False)
+        sess = _mk_session(config=_cfg(
+            seed=FAULT_SEED, schedule={"batched_launch": (0,)}))
+        batch = sess.run_batch(self._template(sess), mqo=False)
+        evs = batch.resilience.get("events", [])
+        degr = [e for e in evs if e["action"] == "degrade"
+                and e["level"] == "per-query"]
+        assert len(degr) == 3           # one event per would-be member
+        assert batch.metrics.batched_dispatches == 0
+        rep = sess.fault_injector.report()
+        assert rep["invocations"]["batched_launch"] >= 1
+        assert rep["fired"].get("batched_launch") == 1
+        for a, b in zip(batch.results, base.results):
+            _tables_bit_identical(a.table, b.table)
+
+    def test_window_after_fault_batches_again(self):
+        sess = _mk_session(config=_cfg(
+            seed=FAULT_SEED, schedule={"batched_launch": (0,)}))
+        first = sess.run_batch(self._template(sess), mqo=False)
+        assert first.metrics.batched_dispatches == 0
+        second = sess.run_batch(self._template(sess), mqo=False)
+        assert second.metrics.batched_dispatches >= 1
+        for a, b in zip(first.results, second.results):
+            _tables_bit_identical(a.table, b.table)
+
+    def test_soak_rates_cover_batched_launch(self):
+        # the acceptance soak's rate map is derived from FAULT_POINTS,
+        # so the new point is exercised automatically
+        assert ALL_RATES.get("batched_launch") == 0.05
+
+
+# ---------------------------------------------------------------------------
 # window exception safety
 # ---------------------------------------------------------------------------
 class TestWindowSafety:
