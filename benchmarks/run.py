@@ -31,6 +31,10 @@ Prints ``name,us_per_call,derived`` CSV lines.
                           execution + plan-shape compile cache: warm
                           recurring-template windows vs per-query
                           literal-keyed dispatch — PR 7)
+  bench_subsumption       beyond-paper    (semantic subsumption + pid
+                          pool: fresh-literal drill-down stream served
+                          from a WEAKER resident CE with zero
+                          exact-fingerprint hits — PR 8)
   bench_serving_prefix    beyond-paper    (LLM prefix-cache MQO)
   roofline_report         assignment      (dry-run roofline terms)
 
@@ -61,6 +65,7 @@ MODULES = [
     "bench_partition",
     "bench_resilience",
     "bench_window_batch",
+    "bench_subsumption",
     "bench_serving_prefix",
     "roofline_report",
 ]

@@ -204,6 +204,38 @@ def main():
               f"({sum(h.result().nrows for h in whs)} rows out, "
               f"literals fresh, one kernel launch for the window)")
 
+    # -- semantic subsumption (PR 8) -------------------------------------
+    # drill-down serving: the dashboard's broad filter stays resident,
+    # and every follow-up narrows it with FRESH literals — no exact
+    # fingerprint ever repeats, so resident re-pricing (PR 3) can't
+    # fire.  Subsumption recognizes each drill-down the window's MQO
+    # left unrewritten as IMPLIED by the weaker resident CE and resumes
+    # from it, applying only the residual conjuncts.
+    dsess = build_tpcds_session(scale_rows=args.scale_rows,
+                                budget_bytes=1 << 30)
+    dsvc = QueryService(dsess, max_batch=4)
+    broad = (dsess.table("store_sales")
+             .where(c.ss_sales_price > 40.0)
+             .select("ss_item_sk", "ss_sales_price", "ss_quantity"))
+    for h in [dsvc.submit(broad) for _ in range(3)]:
+        h.result()                    # window materializes the broad CE
+    dsvc.flush()
+    print()
+    for k in range(3):
+        drill = (dsess.table("store_sales")
+                 .where((c.ss_sales_price > 52.0 + k)
+                        & (c.ss_quantity >= 11 + k))
+                 .select("ss_item_sk", "ss_sales_price"))
+        dh = dsvc.submit(drill)
+        dsvc.flush()
+        dx = dh.explain()
+        sub = dx.get("subsumption", {})
+        print(f"drill-down {k}: subsumption_hit={dx['subsumption_hit']} "
+              f"exact_ce_hit={dx['resident_reuse']} "
+              f"rows={dh.result().nrows} "
+              f"resumes from {sub.get('strict_psi')} "
+              f"residual={sub.get('residual')}")
+
 
 if __name__ == "__main__":
     main()

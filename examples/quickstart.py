@@ -156,6 +156,45 @@ def main():
     top = (sal.where(high_pay).select("sal_emp_id", "salary")).collect()
     print(f"rows={top.nrows} (pruned scan, bit-identical to unpruned)")
 
+    # -- pid cache (PR 8): execution history prunes where stats can't ---
+    # a needle predicate on NON-partition columns: every partition's
+    # min/max covers both atoms, so stats refute nothing — but the
+    # first execution records WHICH partitions actually produced rows
+    # (a per-predicate bitset in the tiny `pid` memory pool), and the
+    # repeat run intersects against it and scans only those
+    needle = (c.from_year == 2001) & (c.sal_emp_id < 50)
+    nq = sal.where(needle).select("sal_emp_id", "salary")
+    first = sess.run_batch([nq], mqo=False)
+    again = sess.run_batch([nq], mqo=False)
+    same = (first.results[0].table.row_multiset()
+            == again.results[0].table.row_multiset())
+    print(f"pid pool: run 1 recorded {first.metrics.pid_records} "
+          f"bitset(s); run 2 hit {again.metrics.pid_hits} and pruned "
+          f"{again.metrics.pid_pruned_parts}/{info.n_partitions} "
+          f"partitions (identical rows: {same})")
+
+    # -- semantic subsumption (PR 8): resume from a WEAKER resident CE --
+    # a window of identical broad queries materializes a covering
+    # expression for age >= 30; a later STRICTLY STRONGER query — never
+    # seen before, so no exact-fingerprint reuse is possible — is
+    # recognized (after the window's MQO leaves it unrewritten) as
+    # IMPLIED by the resident predicate and resumes from the cached CE,
+    # applying only the residual conjuncts
+    weak = emp.where(c.age >= 30).select("emp_id", "age", "dep")
+    for h in [svc.submit(weak) for _ in range(3)]:
+        h.result()
+    strong = emp.where((c.age >= 45) & (c.dep < 20)).select("emp_id",
+                                                            "age")
+    hp = svc.submit(strong)
+    svc.flush()
+    ex = hp.explain()
+    sub = ex.get("subsumption", {})
+    print(f"subsumption: hit={ex['subsumption_hit']} "
+          f"exact_ce_hit={ex['resident_reuse']} "
+          f"rows={hp.result().nrows}")
+    print(f"  resumes from CE {sub.get('strict_psi')} "
+          f"with residual {sub.get('residual')}")
+
 
 if __name__ == "__main__":
     main()

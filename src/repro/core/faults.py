@@ -36,6 +36,9 @@ Named points (wired in ``relational.physical`` / ``core.memory`` /
     ``ce_admission``   CE materialization entering the cache pool
     ``spill_to_host``  device→host spill of an eviction victim
     ``window_close``   the service's window close/execute step
+    ``pid_pool``       a partition-ID bitset read (PR 8); a failure
+                       degrades to stats-only pruning — a pid hit is an
+                       optimization, never a failure domain
 
 Configuration rides on ``SessionConfig.resilience.faults`` (a
 :class:`FaultConfig`); a session without one injects nothing and pays
@@ -48,7 +51,8 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Mapping, Optional, Tuple
 
 FAULT_POINTS = ("scan_h2d", "kernel_launch", "batched_launch",
-                "ce_admission", "spill_to_host", "window_close")
+                "ce_admission", "spill_to_host", "window_close",
+                "pid_pool")
 
 
 class TransientError(RuntimeError):

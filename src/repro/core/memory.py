@@ -598,6 +598,123 @@ class MemoryManager:
         pool.stats.drops += 1
 
 
+class PidPool:
+    """Partition-identifier bitset pool — the hierarchy's fourth pool
+    (``"pid"``, after ``ce`` / ``scan`` / ``prefix``; PR 8).
+
+    One entry per ``(table, canonical-conjunct)``: a bitset over the
+    table's partitions recording which of them produced ANY row when a
+    scan actually evaluated that predicate (populated as a side effect
+    of fused/batched execution).  A bitset is ``(n_partitions + 7) // 8``
+    bytes — orders of magnitude cheaper than the materialized rows it
+    summarizes (PartitionCache's observation) — so entries practically
+    never face eviction, yet later conjunctive queries can intersect
+    them to prune partitions by observed *history* on top of what
+    min/max statistics can refute.
+
+    Soundness contract (enforced by the recording side): a recorded
+    bitset's ABSENT partitions held zero qualifying rows for the stored
+    predicate over the whole table — partitions the recording scan
+    itself pruned count as absent only because pruning is conservative
+    (a pruned partition is exactly empty for the predicate).  Hence for
+    any query predicate *q* with rows(q) ⊆ rows(p), absent partitions
+    are empty for *q* too, and intersecting is exact, never lossy.
+
+    The core stays plan-agnostic: predicates are opaque payloads and
+    the "does stored *p* subsume query *q*" decision is delegated to the
+    ``implies`` callable the caller passes to :meth:`intersect` (the
+    relational layer closes ``canonical.subsumes`` over the table
+    schema).
+    """
+
+    POOL = "pid"
+
+    def __init__(self, manager: "MemoryManager",
+                 policy: Optional[str] = None):
+        # no spill_fn: a bitset is cheaper to recompute (one scan) than
+        # to stage through the host tier, and entries are tiny anyway
+        self._pool = manager.pool(self.POOL, policy=policy)
+
+    @staticmethod
+    def _nbytes(n_partitions: int) -> int:
+        return max(1, (int(n_partitions) + 7) // 8)
+
+    # -- recording -----------------------------------------------------------
+    def record(self, table: str, pred_key, pred, n_partitions: int,
+               present: Iterable[int]) -> MemoryEntry:
+        """Admit the observed presence set for ``(table, pred_key)``.
+        ``pred`` rides along as payload so later lookups can test
+        subsumption against the stored predicate object."""
+        mask = 0
+        for pid in present:
+            mask |= 1 << int(pid)
+        return self._pool.put(
+            (table, pred_key), (mask, int(n_partitions), pred),
+            nbytes=self._nbytes(n_partitions))
+
+    def contains(self, table: str, pred_key) -> bool:
+        return self._pool.contains((table, pred_key))
+
+    # -- lookup --------------------------------------------------------------
+    def intersect(self, table: str, pred_key, pred, n_partitions: int,
+                  live: Iterable[int], implies=None):
+        """Shrink ``live`` by every resident bitset whose stored
+        predicate provably subsumes ``pred`` (exact-key entries match
+        without the subsumption test).  Returns ``(pruned ascending
+        pid tuple, n_bitsets_used)`` — with no usable bitset the input
+        comes back unchanged (history composes with, never overrides,
+        the stats pruner that produced ``live``)."""
+        out = {int(p) for p in live}
+        hits = 0
+        for key, entry in list(self._pool.entries.items()):
+            if not (isinstance(key, tuple) and len(key) == 2
+                    and key[0] == table):
+                continue
+            payload = entry.payload
+            if payload is None:
+                continue
+            mask, n_parts, stored = payload
+            if int(n_parts) != int(n_partitions):
+                continue     # stale layout (belt: invalidated on register)
+            if key[1] == pred_key:
+                usable = True
+            elif implies is not None:
+                usable = bool(implies(stored, pred))
+            else:
+                usable = False
+            if not usable:
+                continue
+            out = {p for p in out if (mask >> p) & 1}
+            self._pool.touch(key)
+            hits += 1
+        return tuple(sorted(out)), hits
+
+    # -- maintenance ---------------------------------------------------------
+    def invalidate_table(self, table: str) -> int:
+        """Drop every bitset of ``table`` (re-register: old data's
+        observed history must not prune the new data's partitions)."""
+        return self._pool.invalidate(
+            lambda k: isinstance(k, tuple) and len(k) == 2
+            and k[0] == table)
+
+    def clear(self) -> None:
+        self._pool.clear()
+
+    def keys(self) -> Iterable:
+        return self._pool.keys()
+
+    @property
+    def used_bytes(self) -> int:
+        return self._pool.used_bytes
+
+    @property
+    def stats(self) -> PoolStats:
+        return self._pool.stats
+
+    def report(self) -> dict:
+        return self._pool.report()
+
+
 def _short_key(key) -> str:
     if isinstance(key, bytes):
         return key.hex()[:12]

@@ -36,6 +36,11 @@ class MQOReport:
     n_partitioned: int = 0        # CEs split into per-partition items
     n_partition_items: int = 0
     n_resident_parts: int = 0     # partitions re-priced as already paid
+    # queries resumed from a resident CE by predicate SUBSUMPTION (no
+    # exact fingerprint match; see relational.canonical) — rewritten
+    # before this optimizer ran, recorded here so window reports show
+    # semantic reuse next to the re-priced residents it composes with
+    n_subsumed: int = 0
     n_selected: int = 0
     selected_value: float = 0.0
     selected_weight: int = 0

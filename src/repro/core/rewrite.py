@@ -112,6 +112,18 @@ def rewrite_batch(
     )
 
 
+def attach_recompute_plan(batch: RewrittenBatch, cache_key: bytes,
+                          plan: PlanNode) -> None:
+    """Register a cache plan built OUTSIDE this batch's CE selection —
+    e.g. a subsumption-resumed query (PR 8) reading a CE retained by an
+    *earlier* window: the entry lets the executor recompute that CE
+    from its covering tree if the hierarchy evicts it mid-window,
+    instead of failing the consumer.  Never overwrites a plan this
+    batch selected itself (an intra-window plan is already
+    chain-consistent)."""
+    batch.cache_plans.setdefault(cache_key, plan)
+
+
 def _find_by_id(root: PlanNode, node_id_: int) -> PlanNode | None:
     from .plan import walk
 

@@ -29,10 +29,12 @@ import numpy as np
 
 from ..core.cache import CacheManager
 from ..core.faults import (DegradationEvent, FaultInjector, InjectedFault)
-from ..core.memory import DEVICE, MemoryManager
+from ..core.memory import DEVICE, MemoryManager, PidPool
 from ..core.optimizer import OptimizedBatch
+from . import expr as E
 from . import logical as L
-from .partition import Partitioning, partition_table
+from .canonical import subsumption_residual
+from .partition import Partitioning, linear_scan_chain, partition_table
 from .fuse import unfuse_plan
 from .physical import ExecContext, ExecMetrics, TableStorage, execute
 from .rules import optimize_single
@@ -74,6 +76,20 @@ class BatchResult:
     @property
     def n_failed(self) -> int:
         return sum(1 for r in self.results if r is None)
+
+
+@dataclass(frozen=True)
+class SubsumptionMeta:
+    """Semantic-reuse index entry for one resident CE (PR 8): the
+    covering tree is a Filter*/Project* chain over one unrestricted
+    Scan, summarized as (table, conjunction, retained columns) so a
+    later query can be matched by PREDICATE IMPLICATION instead of an
+    exact strict-fingerprint equality."""
+
+    tree: L.Node                  # covering tree (eviction-recompute plan)
+    table: str
+    pred: "object"                # conjunction of the chain's filters
+    cols: frozenset               # column names the CE output retains
 
 
 def _spill_to_host(table: Table) -> Table:
@@ -175,6 +191,7 @@ class Session:
         self.prune = getattr(ex, "prune", True)
         self.window_batch = getattr(ex, "window_batch", True)
         self.shape_cache = getattr(ex, "shape_cache", True)
+        self.pid_cache = getattr(ex, "pid_cache", True)
         # One budget-aware memory hierarchy for everything the session
         # materializes on device (see core.memory): the CE cache spills
         # device -> host -> drop; evicted scan columns just drop (their
@@ -200,6 +217,17 @@ class Session:
         # Cache PLANS need no retention: rewrite_batch regenerates a
         # fresh, intra-window-consistent plan for every selected CE.
         self._resident_index: Dict[bytes, bytes] = {}
+        # strict key -> SubsumptionMeta for resident CEs whose tree is
+        # a Filter*/Project* chain over one Scan: the semantic-reuse
+        # index (PR 8) — a later query whose predicate is IMPLIED by a
+        # resident CE's weaker predicate resumes from the CE plus the
+        # residual conjuncts, without an exact-fingerprint match.
+        self._resident_meta: Dict[bytes, "SubsumptionMeta"] = {}
+        # the fourth memory pool (PR 8): per-(table, canonical conjunct)
+        # partition-ID bitsets, populated as a side effect of fused
+        # execution and intersected to prune partitions by observed
+        # history before any scan
+        self._pid_pool = PidPool(self.memory) if self.pid_cache else None
         # lazily-created QueryService backing the one-shot run_batch
         self._oneshot: Optional[QueryService] = None
         # -- resilience (PR 6, ROADMAP "Failure semantics") ----------------
@@ -247,6 +275,11 @@ class Session:
         if storage.name in self.catalog:
             self._ce_cache.clear()
             self._resident_index.clear()
+            self._resident_meta.clear()
+        # pid bitsets are per-table observations of the OLD rows: the
+        # new data's partitions must not be pruned by them
+        if self._pid_pool is not None:
+            self._pid_pool.invalidate_table(storage.name)
         cols = storage.columnar if storage.columnar is not None \
             else columnar_for_stats
         assert cols is not None, "stats need typed columns (pre-processing)"
@@ -279,7 +312,8 @@ class Session:
         return ExecContext.from_exec_config(
             self.catalog, self, cache=cache,
             cost_model=self.cost_model,
-            scan_cache=self._scan_pool if self.use_scan_cache else None)
+            scan_cache=self._scan_pool if self.use_scan_cache else None,
+            pid_cache=self._pid_pool)
 
     def clear_scan_cache(self) -> None:
         """Drop memoized device scan buffers (e.g. after data changes)."""
@@ -327,6 +361,71 @@ class Session:
             if isinstance(key, tuple) and len(key) == 2:
                 out.setdefault(key[0], set()).add(key[1])
         return {k: frozenset(v) for k, v in out.items()}
+
+    # -- semantic subsumption (PR 8) ----------------------------------------
+    def _note_subsumable(self, ce) -> None:
+        """Index a retained CE for subsumption matching when its tree
+        is a Filter*/Project* chain over one unrestricted Scan (the
+        dominant CE shape after MQO rewriting)."""
+        chain = linear_scan_chain(ce.tree)
+        if chain is None:
+            return
+        scan, pred = chain
+        if scan.parts is not None:
+            return
+        self._resident_meta[ce.strict_psi()] = SubsumptionMeta(
+            tree=ce.tree, table=scan.table, pred=pred,
+            cols=frozenset(ce.tree.schema.names))
+
+    def find_subsumer(self, plan: L.Node):
+        """A resident CE whose *weaker* predicate provably subsumes
+        ``plan``'s — the semantic-reuse lookup (PR 8).  ``plan`` must
+        be a canonical Filter*/Project* chain over one unrestricted
+        Scan; candidates must still be materialized, retain every
+        column the query outputs or its residual conjuncts read, and
+        satisfy ``subsumes(resident pred, query pred)`` under the
+        table schema.  Smallest resident entry wins (cheapest re-read).
+
+        Returns ``(strict key, SubsumptionMeta, residual pred)`` or
+        None.  The caller resumes from ``CachedScan(strict)`` plus the
+        residual conjuncts instead of recomputing from the base table —
+        reuse WITHOUT an exact-fingerprint match.
+        """
+        if not self._resident_meta:
+            return None
+        chain = linear_scan_chain(L.as_node(plan))
+        if chain is None:
+            return None
+        scan, pred = chain
+        if scan.parts is not None or scan.table not in self.catalog:
+            return None
+        schema = self.catalog[scan.table].schema
+        out_cols = set(plan.schema.names)
+        qkey = E.canonical(pred)
+        best = None
+        for strict, meta in self._resident_meta.items():
+            if meta.table != scan.table:
+                continue
+            if E.canonical(meta.pred) == qkey:
+                # exact predicate match: the optimizer's resident
+                # re-pricing path owns it (ψ-structural matching +
+                # explain's cache_hit accounting) — subsumption only
+                # claims STRICTLY weaker residents
+                continue
+            if not self._ce_cache.contains(strict):
+                continue
+            resid = subsumption_residual(meta.pred, pred, schema)
+            if resid is None:
+                continue
+            if not (out_cols | E.columns_of(resid)) <= meta.cols:
+                continue
+            entry = self._ce_cache.entry(strict)
+            nbytes = entry.nbytes if entry is not None else 0
+            if best is None or nbytes < best[0]:
+                best = (nbytes, strict, meta, resid)
+        if best is None:
+            return None
+        return best[1], best[2], best[3]
 
     def run_one(self, plan: L.Node,
                 ctx: Optional[ExecContext] = None) -> QueryResult:

@@ -7,6 +7,7 @@ selectivity estimation.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 from typing import Dict, FrozenSet, Tuple, Union
 
@@ -339,9 +340,14 @@ def fold_int_cmp(op: str, v: float, bits: int = 32):
     Returns ("all", bool) when the result is constant, else
     ("cmp", op, int_bound) with the bound saturated to the column's
     ``bits``-wide signed integer range.
-    """
-    import math
 
+    This is the ONE shared fold: :func:`eval_expr`'s compare lowering,
+    partition pruning (``partition._part_maybe``), and interval
+    normalization (``canonical._numeric_atom``) all route through it,
+    so the three sites cannot drift apart — the shared case table in
+    ``tests/test_subsumption.py`` pins each call site to this helper's
+    semantics.
+    """
     if op == "==":
         return ("all", False)   # an integer never equals a fraction
     if op == "!=":

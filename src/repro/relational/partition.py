@@ -315,6 +315,27 @@ def prune_parts(pred: E.Expr, info: PartitionInfo) -> Tuple[int, ...]:
         and _part_maybe(pred, info.col_stats[pid], info, pid, False))
 
 
+def pid_presence_from_mask(mask: np.ndarray, info: PartitionInfo,
+                           parts: Tuple[int, ...]) -> Tuple[int, ...]:
+    """Partition ids among ``parts`` whose scanned rows contain any
+    qualifying row, given the host-side boolean ``mask`` over the rows
+    actually scanned (the concatenation of ``parts`` ranges, in order).
+
+    This is the recording half of the pid bitset pool: partitions NOT
+    in ``parts`` were pruned, and pruning is conservative, so they are
+    exactly empty for the predicate — the returned presence set is a
+    full-table fact whenever the scan started from ``parts = None``
+    (i.e. pruning itself chose ``parts``)."""
+    present: List[int] = []
+    off = 0
+    for pid in parts:
+        n = info.part_rows(pid)
+        if n and bool(np.any(mask[off:off + n])):
+            present.append(int(pid))
+        off += n
+    return tuple(present)
+
+
 # ---------------------------------------------------------------------------
 # plan helpers
 # ---------------------------------------------------------------------------

@@ -38,11 +38,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.cache import CacheManager
+from ..core.faults import DegradationEvent
 from ..core.memory import MemoryPool
 from . import expr as E
 from . import logical as L
+from .canonical import subsumes as _subsumes
 from .fuse import FusedPipeline, fuse_plan
-from .partition import (PartitionInfo, PartitionedCePlan, prune_parts,
+from .partition import (PartitionInfo, PartitionedCePlan,
+                        pid_presence_from_mask, prune_parts,
                         restrict_to_parts)
 from .schema import Schema, Table, empty_like, next_pow2
 
@@ -108,6 +111,11 @@ class ExecMetrics:
     # window batching: shared dispatches and the queries they covered
     batched_dispatches: int = 0
     batched_queries: int = 0
+    # pid bitset pool (PR 8): resident bitsets used by lookups, the
+    # partitions they pruned beyond statistics, and new recordings
+    pid_hits: int = 0
+    pid_pruned_parts: int = 0
+    pid_records: int = 0
     op_seconds: Dict[str, float] = field(default_factory=dict)
 
     def add_time(self, op: str, dt: float):
@@ -178,6 +186,17 @@ class ExecContext:
     # consumers of a poisoned CE fail fast (CEMaterializationError) so
     # the service can rerun them on their unshared residual plans
     failed_ces: set = field(default_factory=set)
+    # core.memory.PidPool (or None): partition-ID bitsets recorded as a
+    # side effect of fused execution and intersected on later lookups
+    # to prune by observed history on top of the stats pruner
+    pid_cache: Optional[object] = None
+    # (table, canonical pred) -> partitions the pid intersection pruned
+    # BEYOND statistics this window (read by service explain())
+    pid_prune_log: Dict[tuple, int] = field(default_factory=dict)
+    # DegradationEvents raised below the service layer (a failed pid
+    # bitset read degrades to stats-only pruning here instead of
+    # surfacing — a pid hit is an optimization, never a failure domain)
+    degradations: list = field(default_factory=list)
 
     def check_fault(self, point: str, key=None) -> None:
         if self.faults is not None:
@@ -213,7 +232,8 @@ class ExecContext:
     def from_exec_config(cls, catalog: Dict[str, "TableStorage"], cfg,
                          *, cache: Optional[CacheManager] = None,
                          cost_model: Optional[object] = None,
-                         scan_cache: Optional[object] = None
+                         scan_cache: Optional[object] = None,
+                         pid_cache: Optional[object] = None
                          ) -> "ExecContext":
         """Build a context from anything shaped like an
         ``relational.service.ExecutionConfig`` (a Session mirrors the
@@ -231,6 +251,7 @@ class ExecContext:
             shape_cache=getattr(cfg, "shape_cache", True),
             cost_model=cost_model,
             scan_cache=scan_cache,
+            pid_cache=pid_cache,
             faults=getattr(cfg, "fault_injector", None))
 
 
@@ -1103,6 +1124,94 @@ def _fused_est(src, pred: E.Expr, child: Table, est_rows: Optional[int],
     return est
 
 
+def _pruned_scan(ctx: ExecContext, src: L.Scan, st: "TableStorage",
+                 pred: E.Expr):
+    """Resolve the live partitions of a fused scan+filter: the
+    conservative stats pruner first, then intersection with resident
+    pid bitsets — observed history composes with, never overrides,
+    statistics (PR 8).  The deferred-sync capacity estimate stays taken
+    over the FULL table (the qualifying rows all live in surviving
+    partitions — estimating over the pruned input would undershoot by
+    exactly the pruned fraction and force the overflow recompact on the
+    hot path), then capped at the pruned input size by the caller.
+
+    This is also the ``pid_pool`` fault point: the bitset read is
+    attempted for EVERY fused scan+filter (an unpartitioned table is
+    just a one-partition layout whose read trivially finds nothing),
+    and any failure in the pid path — injected or real — degrades to
+    stats-only pruning with a :class:`DegradationEvent` instead of
+    surfacing.  A pid hit is an optimization, never a failure domain.
+
+    Returns ``(resolved src, est_rows, pid_scan)``; ``pid_scan`` is
+    ``(table, PartitionInfo, scanned parts)`` when the row mask this
+    scan produces is eligible for presence recording (the scan started
+    unrestricted, so absent-from-mask == empty-for-pred over the whole
+    table), else None.
+    """
+    info = st.partitions
+    partitioned = (ctx.prune and info is not None
+                   and info.n_partitions > 1)
+    live = prune_parts(pred, info) if partitioned else None
+    if ctx.pid_cache is not None:
+        try:
+            ctx.check_fault("pid_pool", key=src.table)
+            if partitioned:
+                key = E.canonical(pred)
+                live2, hits = ctx.pid_cache.intersect(
+                    src.table, key, pred, info.n_partitions, live,
+                    implies=lambda p, q, _s=st.schema:
+                        _subsumes(p, q, _s))
+                ctx.metrics.pid_hits += hits
+                dropped = len(live) - len(live2)
+                if dropped > 0:
+                    ctx.metrics.pid_pruned_parts += dropped
+                    # per-(table, pred) the drop count is deterministic
+                    # within a window: assign, don't accumulate
+                    ctx.pid_prune_log[(src.table, key)] = dropped
+                    live = live2
+        except Exception as exc:
+            ctx.degradations.append(DegradationEvent(
+                query=-1, attempt=1, action="degrade",
+                level="stats-prune", error=repr(exc),
+                detail={"point": "pid_pool", "table": src.table}))
+    if not partitioned:
+        return src, None, None
+    est_rows = None
+    if len(live) < info.n_partitions:
+        from dataclasses import replace as _dc_replace
+
+        src = _dc_replace(src, parts=tuple(live))
+        est_rows = st.nrows
+    scanned = src.parts if src.parts is not None else info.all_parts()
+    return src, est_rows, (src.table, info, scanned)
+
+
+def _pid_record(ctx: ExecContext, pid_scan, pred: E.Expr, mask,
+                nrows: int) -> None:
+    """Record the observed presence bitset for ``(table, pred)`` as a
+    side effect of an eligible fused execution.  Record-once: the host
+    read of ``mask`` synchronizes the device, so a key already resident
+    is skipped before touching the array — warm streams pay nothing
+    here.  Failures degrade to not-recording (never to the query)."""
+    pool = ctx.pid_cache
+    if pool is None or pid_scan is None or mask is None:
+        return
+    table_name, info, parts = pid_scan
+    try:
+        key = E.canonical(pred)
+        if pool.contains(table_name, key):
+            return
+        host = np.asarray(mask)[:nrows]
+        present = pid_presence_from_mask(host, info, parts)
+        pool.record(table_name, key, pred, info.n_partitions, present)
+        ctx.metrics.pid_records += 1
+    except Exception as exc:
+        ctx.degradations.append(DegradationEvent(
+            query=-1, attempt=1, action="degrade", level="no-record",
+            error=repr(exc),
+            detail={"point": "pid_pool", "table": table_name}))
+
+
 def _exec_fused(node: FusedPipeline, ctx: ExecContext) -> Table:
     # covers the Pallas and fused-XLA routes; the eager per-operator
     # path (the degradation ladder's bottom rung) never dispatches here
@@ -1110,25 +1219,14 @@ def _exec_fused(node: FusedPipeline, ctx: ExecContext) -> Table:
     src, pred = node.source, node.pred
     need = set(node.cols) | E.columns_of(pred)
     est_rows = None
+    pid_scan = None
     if isinstance(src, L.Scan):
         st = ctx.catalog[src.table]
-        if (ctx.prune and src.parts is None and st.partitions is not None
-                and st.partitions.n_partitions > 1
-                and not isinstance(pred, E.TrueExpr)):
-            # partition pruning: statistics refute the predicate on the
-            # skipped partitions, so the scan reads only the surviving
-            # contiguous ranges.  The deferred-sync capacity estimate is
-            # taken over the FULL table (the qualifying rows all live in
-            # surviving partitions — estimating over the pruned input
-            # would undershoot by exactly the pruned fraction and force
-            # the overflow recompact on the hot path), then capped at
-            # the pruned input size.
-            live = prune_parts(pred, st.partitions)
-            if len(live) < st.partitions.n_partitions:
-                from dataclasses import replace as _dc_replace
-
-                src = _dc_replace(src, parts=live)
-                est_rows = st.nrows
+        if src.parts is None and not isinstance(pred, E.TrueExpr):
+            # partition pruning: statistics (then resident pid bitsets)
+            # refute the predicate on the skipped partitions, so the
+            # scan reads only the surviving contiguous ranges
+            src, est_rows, pid_scan = _pruned_scan(ctx, src, st, pred)
         needed = tuple(n for n in src.schema.names if n in need)
         child = _exec_scan(src, ctx, needed)
     else:
@@ -1206,6 +1304,7 @@ def _exec_fused(node: FusedPipeline, ctx: ExecContext) -> Table:
         count = int(count)
         outs = project_compact(next_pow2(max(count, 1)))
 
+    _pid_record(ctx, pid_scan, pred, mask, child.nrows)
     ctx.metrics.rows_processed += child.nrows
     return Table(out_schema, dict(zip(node.cols, outs)), count)
 
@@ -1225,6 +1324,9 @@ class _BatchMember:
     ivals: tuple
     fvals: tuple
     pred_names: Tuple[str, ...]   # numeric predicate columns, schema order
+    # (table, PartitionInfo, scanned parts) when this member's row mask
+    # is eligible for pid-bitset presence recording (see _pruned_scan)
+    pid_scan: Optional[tuple] = None
 
 
 def plan_window_batches(plans, ctx: ExecContext):
@@ -1254,20 +1356,18 @@ def plan_window_batches(plans, ctx: ExecContext):
             continue
         src = node.source
         est_rows = None
+        pid_scan = None
         if isinstance(src, L.Scan):
             st = ctx.catalog.get(src.table)
             if st is None:
                 continue
-            if (ctx.prune and src.parts is None
-                    and st.partitions is not None
-                    and st.partitions.n_partitions > 1):
-                # resolve pruning NOW so the group key reflects the
-                # actual scanned ranges (members with different live
-                # partition sets must not share a mask dispatch)
-                live = prune_parts(pred, st.partitions)
-                if len(live) < st.partitions.n_partitions:
-                    src = _dc_replace(src, parts=live)
-                    est_rows = st.nrows
+            if src.parts is None:
+                # resolve pruning (stats + pid bitsets) NOW so the
+                # group key reflects the actual scanned ranges (members
+                # with different live partition sets must not share a
+                # mask dispatch)
+                src, est_rows, pid_scan = _pruned_scan(ctx, src, st,
+                                                       pred)
             leaf = ("scan", src.table, src.parts, st.fmt)
         elif isinstance(src, L.CachedScan):
             leaf = ("cs", src.psi)
@@ -1283,7 +1383,7 @@ def plan_window_batches(plans, ctx: ExecContext):
             pos=pos, node=node, src=src,
             need=frozenset(node.cols) | E.columns_of(pred),
             est_rows=est_rows, program=program, ivals=ivals,
-            fvals=fvals, pred_names=pred_names))
+            fvals=fvals, pred_names=pred_names, pid_scan=pid_scan))
 
     groups = []
     wd = getattr(ctx.cost_model, "window_dispatch_cost", None) \
@@ -1367,6 +1467,7 @@ def _finalize_group(members, prep, ctx: ExecContext):
         else:
             count = int(crow)
             cols_out = project_compact(next_pow2(max(count, 1)))
+        _pid_record(ctx, m.pid_scan, m.node.pred, mrow, child.nrows)
         ctx.metrics.rows_processed += child.nrows
         outs.append(Table(m.node.schema,
                           dict(zip(m.node.cols, cols_out)), count))

@@ -55,6 +55,8 @@ from typing import Any, Dict, List, Optional, Sequence, Set
 from ..core.faults import DegradationEvent, InjectedFault
 from ..core.fingerprint import fingerprint_set
 from ..core.optimizer import MultiQueryOptimizer
+from ..core.rewrite import attach_recompute_plan
+from . import expr as E
 from . import logical as L
 from .canonical import canonicalize_plan
 from .rewriter import RelationalRewriter, make_ce_transform
@@ -77,7 +79,8 @@ def _coerce_submission(plan, entry: str, stacklevel: int = 3):
         return hook(), bool(getattr(plan, "hint_cache", False))
     node = L.as_node(plan)
     warnings.warn(
-        f"passing raw logical.Node trees to {entry} is deprecated — "
+        f"passing raw logical.Node trees to {entry} is deprecated "
+        f"and the shim will be REMOVED two releases after v0.8 — "
         f"build queries with the Relation API (session.table(...)"
         f".where(...)...)", DeprecationWarning, stacklevel=stacklevel)
     return node, False
@@ -110,6 +113,12 @@ class ExecutionConfig:
     # plan SHAPE (literals hoisted to operand arrays) so recurring
     # templates never re-trace.  False forces literal-keyed jit.
     shape_cache: bool = True
+    # partition-identifier bitset pool (PR 8): record, per canonical
+    # conjunct, which partitions produced any row as a side effect of
+    # fused execution, and intersect resident bitsets on later queries
+    # to prune by observed history ON TOP of the stats pruner.  False
+    # disables both recording and lookup (stats-only pruning).
+    pid_cache: bool = True
     sharding: Optional[Any] = None          # jax.sharding.Sharding
     disk_latency_per_byte: float = 0.0
 
@@ -138,6 +147,12 @@ class MqoConfig:
     # session budget, so planning stops over-admitting CEs the hierarchy
     # would immediately spill.
     pressure_aware: bool = True
+    # Semantic subsumption (PR 8): before the window optimizes, a query
+    # whose predicate is IMPLIED by a retained resident CE's weaker
+    # predicate resumes from that CE plus the residual conjuncts
+    # (relational.canonical.subsumption_residual) — reuse without an
+    # exact strict-fingerprint match.  False requires exact matches.
+    subsumption: bool = True
 
 
 @dataclass(frozen=True)
@@ -568,6 +583,7 @@ class QueryService:
         optimized = None
         ces: list = []
         pre_resident: frozenset = frozenset()
+        subsumed: Dict[int, dict] = {}
         executed: List[Optional[L.Node]] = list(plans)
         if not mqo or not live:
             ctx = sess._fresh_ctx()
@@ -589,12 +605,16 @@ class QueryService:
                 # freed CE bytes are available to this window's MCKP
                 cache.clear()
                 sess._resident_index.clear()
+                sess._resident_meta.clear()
             else:
                 # prune metadata for entries the hierarchy has dropped —
-                # this dict must not grow with the workload's history
+                # these dicts must not grow with the workload's history
                 for sfp in [s for s in sess._resident_index
                             if not cache.contains(s)]:
                     del sess._resident_index[sfp]
+                for sfp in [s for s in sess._resident_meta
+                            if not cache.contains(s)]:
+                    del sess._resident_meta[sfp]
             capacity = sess.planning_capacity(budget)
             partitioner = None
             # prune=False must force the UNPRUNED path end to end: CE
@@ -649,6 +669,46 @@ class QueryService:
                     # cache entry; whole-CE re-pricing would be unsound
                     if ce.partition_detail is None:
                         sess._resident_index[ce.strict_psi()] = ce.psi
+                        sess._note_subsumable(ce)
+            # -- semantic subsumption (PR 8) ---------------------------
+            # Backstop for queries the MQO left UNREWRITTEN (no
+            # intra-window sharing, no exact-fingerprint resident): if
+            # a retained resident CE's weaker predicate IMPLIES the
+            # query's, the query resumes from CachedScan(strict) + the
+            # residual conjuncts — reuse with ZERO exact-fingerprint
+            # matches.  Running AFTER the optimizer keeps priorities
+            # right: a window that can share intra-window or resume
+            # exactly still materializes / consumes its own tighter CE
+            # (recurring template families keep per-threshold residents
+            # side by side), and subsumption picks up only the queries
+            # that would otherwise go cold.  The original canonical
+            # plan stays in ``plans`` as the CEMaterializationError
+            # fallback; the subsumer's covering tree is attached as a
+            # recompute plan so eviction mid-window means recompute,
+            # not failure.
+            sub_plans: Dict[int, L.Node] = {}
+            if budget > 0 and getattr(sess.config.mqo, "subsumption",
+                                      True):
+                for j, i in enumerate(live):
+                    if optimized.rewritten.plans[j] is not plans[i]:
+                        continue    # MQO already gave it sharing
+                    try:
+                        hit = sess.find_subsumer(plans[i])
+                    except Exception:
+                        continue    # lookup is an optimization only
+                    if hit is None:
+                        continue
+                    strict, meta, resid = hit
+                    sub_plans[i] = _subsumption_plan(
+                        plans[i], strict, meta, resid)
+                    attach_recompute_plan(
+                        optimized.rewritten, strict,
+                        L.Cache(child=meta.tree, psi=strict))
+                    subsumed[i] = {
+                        "strict_psi": strict.hex()[:12],
+                        "residual": repr(E.canonical(resid)),
+                    }
+            optimized.report.n_subsumed = len(sub_plans)
             ctx = sess._fresh_ctx(cache)
             ctx.cache_plans = dict(optimized.rewritten.cache_plans)
             # execution-side records for partition-grained CEs: which
@@ -668,6 +728,8 @@ class QueryService:
                                 for ce in ces}
             for j, i in enumerate(live):
                 executed[i] = optimized.rewritten.plans[j]
+            for i, p in sub_plans.items():
+                executed[i] = p
 
         t0 = time.perf_counter()
         results: List[Optional[Any]] = [None] * n
@@ -719,6 +781,11 @@ class QueryService:
         )
         all_events = [e.as_dict()
                       for i in range(n) for e in events[i]]
+        # context-level degradations (e.g. a failed pid bitset read
+        # falling back to stats-only pruning) are window-scoped, not
+        # attributable to one handle — report them alongside
+        all_events += [e.as_dict()
+                       for e in getattr(ctx, "degradations", ())]
         rep: Dict[str, Any] = {}
         if all_events:
             rep["events"] = all_events
@@ -732,7 +799,9 @@ class QueryService:
                       executed_plans=executed, ce_by_key=ce_by_key,
                       pre_resident=pre_resident, errors=errors,
                       events=events, ctx=ctx,
-                      shared_dispatch=shared_dispatch)
+                      shared_dispatch=shared_dispatch,
+                      subsumed=subsumed,
+                      pid_log=dict(getattr(ctx, "pid_prune_log", {})))
         return batch
 
     @staticmethod
@@ -801,11 +870,14 @@ class QueryService:
     def _resolve(self, handles, batch, window, *, mqo, k,
                  executed_plans, ce_by_key, pre_resident,
                  errors=None, events=None, ctx=None,
-                 shared_dispatch=None) -> None:
+                 shared_dispatch=None, subsumed=None,
+                 pid_log=None) -> None:
         n = len(handles)
         errors = errors or {}
         events = events or {}
         shared_dispatch = shared_dispatch or {}
+        subsumed = subsumed or {}
+        pid_log = pid_log or {}
         for i, (h, qr) in enumerate(zip(handles, batch.results)):
             if h._done:
                 continue
@@ -819,7 +891,7 @@ class QueryService:
             h._resolve(qr, _LazyExplain(
                 h, qr, window, i, n, bool(mqo), k,
                 executed_plans[i], ce_by_key, pre_resident,
-                shared_dispatch.get(i)))
+                shared_dispatch.get(i), subsumed.get(i), pid_log))
 
     @staticmethod
     def _failure_state(handle, exc, window, position, n, events, plan,
@@ -895,11 +967,11 @@ class _LazyExplain:
 
     __slots__ = ("handle", "qr", "window", "position", "window_size",
                  "mqo", "k", "executed_plan", "ce_by_key", "pre_resident",
-                 "shared_dispatch")
+                 "shared_dispatch", "subsumption", "pid_log")
 
     def __init__(self, handle, qr, window, position, window_size, mqo, k,
                  executed_plan, ce_by_key, pre_resident,
-                 shared_dispatch=None):
+                 shared_dispatch=None, subsumption=None, pid_log=None):
         self.handle = handle
         self.qr = qr
         self.window = window
@@ -914,6 +986,12 @@ class _LazyExplain:
         # dispatch with this one (includes this position); None when
         # the query ran on the per-query path
         self.shared_dispatch = shared_dispatch
+        # {"strict_psi", "residual"} when this query resumed from a
+        # resident CE by predicate subsumption (PR 8); None otherwise
+        self.subsumption = subsumption
+        # window-level (table, canonical pred) -> partitions the pid
+        # bitset intersection pruned beyond statistics
+        self.pid_log = pid_log or {}
 
     def __call__(self) -> dict:
         ce_reports = []
@@ -951,10 +1029,53 @@ class _LazyExplain:
             "submitted": L.explain(self.handle.plan),
             "ces": ce_reports,
             "resident_reuse": any(c["cache_hit"] for c in ce_reports),
+            "subsumption_hit": self.subsumption is not None,
+            "pid_pruned_parts": _pid_pruned_for(self.executed_plan,
+                                                self.pid_log),
         }
+        if self.subsumption is not None:
+            out["subsumption"] = dict(self.subsumption)
         if self.shared_dispatch:
             out["shared_dispatch"] = list(self.shared_dispatch)
         return out
+
+
+def _subsumption_plan(plan: L.Node, strict: bytes, meta,
+                      resid) -> L.Node:
+    """CachedScan(resident CE) → residual Filter → Project producing
+    exactly ``plan``'s output columns — the subsumption-resume plan
+    (mirrors RelationalRewriter.make_extraction; left logical, so
+    execution fuses/batches it like any chain)."""
+    from .canonical import is_true
+
+    out: L.Node = L.CachedScan(psi=strict, _schema=meta.tree.schema,
+                               source_label=meta.tree.label)
+    if not is_true(resid):
+        out = L.Filter(child=out, pred=resid)
+    if tuple(out.schema.names) != tuple(plan.schema.names):
+        out = L.Project(child=out, cols=tuple(plan.schema.names))
+    return out
+
+
+def _pid_pruned_for(plan, pid_log) -> int:
+    """Partitions the pid-bitset intersection pruned (beyond stats) for
+    this query's fused scan+filter, looked up by (table, canonical
+    predicate) in the window's prune log; 0 for non-scan plans."""
+    if not pid_log or plan is None:
+        return 0
+    from .fuse import FusedPipeline, fuse_plan
+
+    try:
+        node = L.as_node(plan)
+        if not isinstance(node, FusedPipeline):
+            node = fuse_plan(node)
+        if (isinstance(node, FusedPipeline)
+                and isinstance(node.source, L.Scan)):
+            return int(pid_log.get(
+                (node.source.table, E.canonical(node.pred)), 0))
+    except Exception:
+        pass
+    return 0
 
 
 def _cached_scan_keys(plan: L.Node) -> List[bytes]:

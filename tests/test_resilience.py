@@ -444,6 +444,89 @@ class TestBatchedLaunchFault:
 
 
 # ---------------------------------------------------------------------------
+# pid bitset pool fault (PR 8)
+# ---------------------------------------------------------------------------
+class TestPidPoolFault:
+    """A pid bitset read is an optimization, never a failure domain:
+    when the ``pid_pool`` point fires, the scan degrades to STATS-ONLY
+    partition pruning (a DegradationEvent, never a QueryError) and the
+    results stay bit-identical to the fault-free run."""
+
+    P = Schema.of(("a", I32), ("b", I32), ("c", I32))
+
+    def _mk(self, config=None):
+        # b == 777 is CORRELATED with the range-partition key a (only
+        # rows with a < 130 carry it), so per-partition min/max stats
+        # on b cannot refute the value anywhere — only the recorded
+        # presence bitset prunes the other partitions
+        rng = np.random.default_rng(13)
+        a = rng.integers(0, 1000, 4000).astype(np.int32)
+        b = np.where(a < 130, 777,
+                     rng.integers(0, 1000, 4000)).astype(np.int32)
+        c = rng.integers(0, 100, 4000).astype(np.int32)
+        cols = {"a": a, "b": b, "c": c}
+        if config is None:
+            config = SessionConfig(memory=MemoryConfig(
+                budget_bytes=1 << 24))
+        sess = Session.from_config(config)
+        st, _ = make_storage("p", self.P, 4000, "columnar", cols=cols)
+        sess.register(st, columnar_for_stats=cols,
+                      partitioning=Partitioning("a", "range", 8))
+        return sess
+
+    def _seed_then_probe(self, sess):
+        t = lambda: sess.table("p")  # noqa: E731
+        seed = t().filter(E.cmp("b", "==", 777)).project("a", "b", "c")
+        probe = t().filter(E.and_(E.cmp("b", "==", 777),
+                                  E.cmp("c", ">", 10))).project("a", "b")
+        s = sess.run_batch([seed], mqo=False)
+        p = sess.run_batch([probe], mqo=False)
+        return s, p
+
+    def test_poisoned_bitset_read_degrades_to_stats_prune(self):
+        ref = self._mk()
+        s0, p0 = self._seed_then_probe(ref)
+        assert s0.metrics.pid_records >= 1, "seed never recorded a bitset"
+        # precondition: history prunes beyond stats on the subsumed probe
+        assert p0.metrics.pid_hits >= 1
+        assert p0.metrics.pid_pruned_parts > 0
+
+        sess = self._mk(config=_cfg(rates={"pid_pool": 1.0}))
+        s1, p1 = self._seed_then_probe(sess)
+        # every bitset read failed -> stats-only pruning, never a failure
+        assert p1.metrics.pid_pruned_parts == 0
+        assert p1.n_failed == 0 and s1.n_failed == 0
+        evs = [e for e in p1.resilience.get("events", [])
+               if e.get("point") == "pid_pool"]
+        assert evs, "degradation never reported"
+        assert all(e["action"] == "degrade" for e in evs)
+        assert any(e["level"] == "stats-prune" for e in evs)
+        _tables_bit_identical(p1.results[0].table, p0.results[0].table)
+        _tables_bit_identical(s1.results[0].table, s0.results[0].table)
+        assert sess.memory.audit() == []
+
+    def test_fault_free_windows_resume_pid_pruning(self):
+        # the pool itself survives a poisoned read: once the injector
+        # stops firing, the NEXT probe prunes from history again
+        sess = self._mk(config=_cfg(seed=0, schedule={"pid_pool": (1,)}))
+        ref = self._mk()
+        _, p0 = self._seed_then_probe(ref)
+        _, p1 = self._seed_then_probe(sess)       # probe's read faulted
+        assert p1.metrics.pid_pruned_parts == 0
+        probe = sess.table("p").filter(
+            E.and_(E.cmp("b", "==", 777),
+                   E.cmp("c", ">", 10))).project("a", "b")
+        p2 = sess.run_batch([probe], mqo=False)
+        assert p2.metrics.pid_pruned_parts > 0
+        _tables_bit_identical(p2.results[0].table, p0.results[0].table)
+
+    def test_soak_rates_cover_pid_pool(self):
+        # the acceptance soak derives its rate map from FAULT_POINTS,
+        # so the new point is exercised automatically
+        assert ALL_RATES.get("pid_pool") == 0.05
+
+
+# ---------------------------------------------------------------------------
 # window exception safety
 # ---------------------------------------------------------------------------
 class TestWindowSafety:
