@@ -291,6 +291,79 @@ def main_mixed() -> List[str]:
         f"canonical_hit_rate={out['canonical_hit_rate']:.2f}")]
 
 
+# ---------------------------------------------------------------------------
+# tracing-overhead gate (PR 9): the telemetry subsystem must be cheap
+# enough to leave on — warm-window throughput with span tracing ENABLED
+# must stay within 5% of the tracing-DISABLED throughput on the same
+# long-lived session.  (The metrics registry + calibration log are
+# always on in both modes; the gate isolates the opt-in span tracer.)
+# ---------------------------------------------------------------------------
+TRACING_MIN_RATIO = 0.95
+
+
+def run_tracing_overhead() -> Dict:
+    # jit warmup outside the measured session
+    warmup = build_tpcds_session(scale_rows=SCALE_ROWS, fmt=FMT,
+                                 budget_bytes=BUDGET)
+    wq = _dashboard(tpcds_queries(warmup))
+    wsvc = QueryService(warmup, max_batch=MAX_BATCH)
+    _windowed_pass(wsvc, wq)
+
+    sess = build_tpcds_session(scale_rows=SCALE_ROWS, fmt=FMT,
+                               budget_bytes=BUDGET)
+    sess.disk_latency_per_byte = DISK_LATENCY
+    queries = _dashboard(tpcds_queries(sess))
+    svc = QueryService(sess, max_batch=MAX_BATCH)
+    _windowed_pass(svc, queries)          # prime the resident CEs
+
+    # interleave the two modes pass-by-pass so drift (allocator state,
+    # cache temperature) hits both sides equally; best-of per mode
+    off_s: List[float] = []
+    on_s: List[float] = []
+    for _ in range(REPEATS):
+        sess.telemetry().disable_tracing()
+        off_s.append(_windowed_pass(svc, queries)["seconds"])
+        sess.enable_tracing()
+        on_s.append(_windowed_pass(svc, queries)["seconds"])
+    tracer = sess.telemetry().tracer
+    n_spans = sum(1 for root in tracer.finished for _ in root.walk())
+    trace = sess.telemetry().export_chrome_trace()
+    sess.telemetry().disable_tracing()
+
+    n = len(queries)
+    disabled_s, enabled_s = min(off_s), min(on_s)
+    ratio = (n / max(enabled_s, 1e-12)) / (n / max(disabled_s, 1e-12))
+    out = {
+        "scale_rows": SCALE_ROWS, "fmt": FMT,
+        "n_queries": n, "max_batch": MAX_BATCH,
+        "disabled_warm_s": disabled_s,
+        "enabled_warm_s": enabled_s,
+        "disabled_pass_seconds": off_s,
+        "enabled_pass_seconds": on_s,
+        "throughput_ratio": ratio,
+        "min_ratio": TRACING_MIN_RATIO,
+        "traced_spans": n_spans,
+        "trace_events": len(trace["traceEvents"]),
+    }
+    save_result("service_tracing_overhead", out)
+    if ratio < TRACING_MIN_RATIO:
+        raise RuntimeError(
+            f"tracing overhead gate: enabled/disabled warm throughput "
+            f"ratio {ratio:.3f} < {TRACING_MIN_RATIO}")
+    return out
+
+
+def main_tracing() -> List[str]:
+    out = run_tracing_overhead()
+    return [csv_line(
+        "service_tracing_overhead", out["enabled_warm_s"],
+        f"disabled_warm_s={out['disabled_warm_s']:.3f};"
+        f"enabled_warm_s={out['enabled_warm_s']:.3f};"
+        f"throughput_ratio={out['throughput_ratio']:.3f};"
+        f"spans={out['traced_spans']}")]
+
+
 if __name__ == "__main__":
     print("\n".join(main()))
     print("\n".join(main_mixed()))
+    print("\n".join(main_tracing()))

@@ -1,0 +1,12 @@
+"""Telemetry tracing-overhead gate (PR 9).
+
+Thin runner around :func:`bench_service.main_tracing`: warm-window
+throughput on the recurring dashboard with span tracing enabled must
+stay >= 0.95x the tracing-disabled throughput (the always-on metrics
+registry + calibration log are common to both modes).  Emits the
+``service_tracing_overhead`` result set consumed by BENCH_pr9.json.
+"""
+from bench_service import main_tracing as main
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -66,9 +66,28 @@ MODULES = [
     "bench_resilience",
     "bench_window_batch",
     "bench_subsumption",
+    "bench_telemetry",
     "bench_serving_prefix",
     "roofline_report",
 ]
+
+# modules that legitimately emit no reports/bench/*.json artifact (the
+# roofline report is a stdout-only dry-run summary); every other bench
+# MUST save_result or the run fails loudly (PR 9 satellite — a silently
+# missing BENCH artifact is how BENCH_pr7.json went uncommitted)
+NO_ARTIFACT = frozenset({"roofline_report"})
+
+
+def _artifacts_written_since(t0: float) -> int:
+    """JSON result files common.save_result produced after ``t0``."""
+    from common import RESULTS_DIR
+
+    if not os.path.isdir(RESULTS_DIR):
+        return 0
+    return sum(
+        1 for fn in os.listdir(RESULTS_DIR)
+        if fn.endswith(".json")
+        and os.path.getmtime(os.path.join(RESULTS_DIR, fn)) >= t0)
 
 
 def _merge_results(out_path: str, since: float) -> None:
@@ -110,6 +129,14 @@ def main() -> None:
             mod = __import__(mod_name)
             for line in mod.main():
                 print(line, flush=True)
+            if (mod_name not in NO_ARTIFACT
+                    and _artifacts_written_since(t0) == 0):
+                failures += 1
+                print(f"# {mod_name} FAILED: completed without writing "
+                      f"any reports/bench/*.json artifact — its results "
+                      f"would be missing from the --out merge",
+                      flush=True)
+                continue
             print(f"# {mod_name} done in {time.time() - t0:.1f}s",
                   flush=True)
         except Exception:

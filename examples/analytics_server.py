@@ -23,6 +23,12 @@ a ``QueryError`` — siblings complete, ``result()`` re-raises,
 ``explain()`` carries the post-mortem, and the memory-pool audit stays
 clean.
 
+A final telemetry section (PR 9) replays a warm dashboard pass with
+span tracing enabled, dumps a Perfetto-loadable Chrome trace of the
+query lifecycle, and prints the unified ``metrics_report()``: query
+counters, per-template latency percentiles, pool hit rates, and the
+cost model's predicted-vs-actual calibration table.
+
     PYTHONPATH=src python examples/analytics_server.py \
         [--window 12] [--max-batch 4] [--passes 3]
 """
@@ -235,6 +241,45 @@ def main():
               f"rows={dh.result().nrows} "
               f"resumes from {sub.get('strict_psi')} "
               f"residual={sub.get('residual')}")
+
+    # -- unified telemetry (PR 9) ----------------------------------------
+    # the long-lived session has been counting all along (the metrics
+    # registry and the cost-model calibration log are always on); span
+    # tracing is opt-in.  Enable it, replay one warm dashboard pass
+    # through the original service, and dump a Perfetto-loadable Chrome
+    # trace of the full lifecycle (submit -> window -> canonicalize ->
+    # MQO -> dispatch -> resolve) next to a metrics snapshot.
+    sess.enable_tracing()
+    for h in [svc.submit(q) for q in dashboard]:
+        h.result()
+    svc.flush()
+    os.makedirs("reports", exist_ok=True)
+    trace_path = os.path.join("reports", "analytics_trace.json")
+    doc = sess.telemetry().export_chrome_trace(trace_path)
+    print(f"\ntraced warm pass: {len(doc['traceEvents'])} span events "
+          f"-> {trace_path} (load in https://ui.perfetto.dev)")
+
+    rep = svc.metrics_report()
+    counters = rep["registry"]["counters"]
+    lat = rep["latency"]["all"]
+    print(f"queries: {counters['queries.submitted']:.0f} submitted / "
+          f"{counters.get('queries.succeeded', 0):.0f} ok / "
+          f"{counters.get('queries.failed', 0):.0f} failed over "
+          f"{counters['windows.closed']:.0f} windows; "
+          f"inter-arrival EWMA "
+          f"{rep['arrival_interval_ewma_s']['value'] * 1e3:.2f} ms")
+    print(f"latency p50/p90/p99 = {lat['p50'] * 1e3:.1f}/"
+          f"{lat['p90'] * 1e3:.1f}/{lat['p99'] * 1e3:.1f} ms over "
+          f"{len(rep['latency']['families'])} template families")
+    for name, st in sorted(rep["pools"].items()):
+        print(f"pool {name:<6} hit_rate={st['hit_rate']:.2f} "
+              f"used={st.get('used', 0)}B evictions="
+              f"{st.get('evictions', 0)}")
+    for kind, row in rep["calibration"]["kinds"].items():
+        print(f"calibration[{kind}]: n={row['n']} "
+              f"predicted_cost={row['predicted_cost']:.3g} "
+              f"measured={row['measured_seconds']:.3f}s "
+              f"bytes_err={row['bytes_mean_abs_rel_err']:.2f}")
 
 
 if __name__ == "__main__":

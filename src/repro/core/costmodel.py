@@ -14,7 +14,8 @@ a FLOPs/HBM-based one for prefix caching.
 """
 from __future__ import annotations
 
-from typing import Protocol, Sequence
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Protocol, Sequence
 
 from .covering import CoveringExpression
 from .plan import PlanNode
@@ -48,6 +49,111 @@ class CostModel(Protocol):
     # pass in the relational engine).  When absent, consumers are priced
     # as m bare cache reads, which overvalues CEs whose members diverge
     # from the covering expression.
+    #
+    # Optional: concrete models may also provide
+    #   calibration() -> dict
+    # the predicted-vs-measured accuracy report assembled from an
+    # attached CalibrationLog (set ``model.calibration_log``) — see
+    # below.  repro.relational.stats.RelationalCostModel implements it.
+
+
+# ---------------------------------------------------------------------------
+# cost-model accuracy accounting
+# ---------------------------------------------------------------------------
+@dataclass
+class CalibrationSample:
+    """One predicted-vs-measured observation: a CE materialization
+    (Eq. 2's C_E(τ*) + C_W against the wall clock) or a cached read
+    (C_R against the wall clock).  Costs are in the model's arbitrary
+    time units; ``measured_seconds`` is wall time — the per-kind ratio
+    of the two sums is the model's implied unit scale, and the spread
+    of per-sample ratios around it is its (in)accuracy."""
+
+    kind: str                      # "materialize" | "cached_read"
+    key: str                       # strict fingerprint hex (short)
+    predicted_cost: float
+    measured_seconds: float
+    predicted_bytes: int = 0
+    measured_bytes: int = 0
+    predicted_rows: int = 0
+    measured_rows: int = 0
+
+    def as_dict(self) -> dict:
+        return {
+            "kind": self.kind, "key": self.key,
+            "predicted_cost": self.predicted_cost,
+            "measured_seconds": self.measured_seconds,
+            "predicted_bytes": self.predicted_bytes,
+            "measured_bytes": self.measured_bytes,
+            "predicted_rows": self.predicted_rows,
+            "measured_rows": self.measured_rows,
+        }
+
+
+@dataclass
+class CalibrationLog:
+    """Accumulates :class:`CalibrationSample`\\ s and aggregates them
+    into the ``CostModel.calibration()`` report: per kind, the implied
+    cost-unit-per-second scale and mean absolute relative errors of the
+    byte/row predictions.  Bounded: keeps the most recent
+    ``max_samples`` raw samples (aggregates cover everything seen)."""
+
+    max_samples: int = 1024
+    samples: List[CalibrationSample] = field(default_factory=list)
+    _agg: Dict[str, Dict[str, float]] = field(default_factory=dict)
+
+    def record(self, sample: CalibrationSample) -> None:
+        self.samples.append(sample)
+        if len(self.samples) > self.max_samples:
+            del self.samples[: len(self.samples) - self.max_samples]
+        a = self._agg.setdefault(sample.kind, {
+            "n": 0, "predicted_cost": 0.0, "measured_seconds": 0.0,
+            "predicted_bytes": 0, "measured_bytes": 0,
+            "abs_rel_err_bytes": 0.0, "abs_rel_err_rows": 0.0,
+        })
+        a["n"] += 1
+        a["predicted_cost"] += sample.predicted_cost
+        a["measured_seconds"] += sample.measured_seconds
+        a["predicted_bytes"] += sample.predicted_bytes
+        a["measured_bytes"] += sample.measured_bytes
+        if sample.measured_bytes > 0:
+            a["abs_rel_err_bytes"] += abs(
+                sample.predicted_bytes - sample.measured_bytes
+            ) / sample.measured_bytes
+        if sample.measured_rows > 0:
+            a["abs_rel_err_rows"] += abs(
+                sample.predicted_rows - sample.measured_rows
+            ) / sample.measured_rows
+
+    def report(self) -> dict:
+        kinds = {}
+        for kind, a in sorted(self._agg.items()):
+            n = max(int(a["n"]), 1)
+            kinds[kind] = {
+                "n": int(a["n"]),
+                "predicted_cost": a["predicted_cost"],
+                "measured_seconds": a["measured_seconds"],
+                "cost_units_per_second": (
+                    a["predicted_cost"] / a["measured_seconds"]
+                    if a["measured_seconds"] > 0 else None),
+                "predicted_bytes": int(a["predicted_bytes"]),
+                "measured_bytes": int(a["measured_bytes"]),
+                "bytes_mean_abs_rel_err": a["abs_rel_err_bytes"] / n,
+                "rows_mean_abs_rel_err": a["abs_rel_err_rows"] / n,
+            }
+        return {
+            "n_samples": sum(k["n"] for k in kinds.values()),
+            "kinds": kinds,
+            "samples": [s.as_dict() for s in self.samples],
+        }
+
+
+def model_calibration(model) -> dict:
+    """``calibration()`` for any model: the attached log's report, or
+    an empty report when no log was ever attached."""
+    log: Optional[CalibrationLog] = getattr(model, "calibration_log",
+                                            None)
+    return (log or CalibrationLog()).report()
 
 
 def price_ce(ce: CoveringExpression, model: CostModel) -> CoveringExpression:

@@ -123,6 +123,10 @@ class FaultInjector:
                            (config.schedule or {}).items()}
         self.fired: List[FaultRecord] = []
         self.suppressed = 0         # fires skipped past max_faults
+        # optional core.telemetry.MetricsRegistry; when set, every
+        # check() mirrors its outcome into fault.* counters so soak
+        # tests can assert fault/degradation counts from one place
+        self.registry = None
 
     @classmethod
     def from_config(cls, config: Optional[FaultConfig]
@@ -146,6 +150,9 @@ class FaultInjector:
         assert point in FAULT_POINTS, f"unknown fault point {point!r}"
         index = self._counts[point]
         self._counts[point] = index + 1
+        reg = self.registry
+        if reg is not None:
+            reg.inc(f"fault.invocations.{point}")
         draw = self._rngs[point].random()
         fire = index in self._scheduled.get(point, frozenset())
         rate = self._rate(point)
@@ -156,9 +163,14 @@ class FaultInjector:
         mx = self.config.max_faults
         if mx is not None and len(self.fired) >= mx:
             self.suppressed += 1
+            if reg is not None:
+                reg.inc("fault.suppressed")
             return
         rec = FaultRecord(point=point, index=index, key=key)
         self.fired.append(rec)
+        if reg is not None:
+            reg.inc(f"fault.fired.{point}")
+            reg.inc("fault.fired.total")
         raise InjectedFault(point, index, key=key)
 
     # -- telemetry -----------------------------------------------------------

@@ -264,6 +264,15 @@ class MemoryManager:
         # installed by the owning Session when fault injection is on
         self.faults = None
         self.quarantined = 0      # entries dropped by the serving guard
+        # optional relational.observe.Telemetry; when set, the session's
+        # metrics registry mirrors eviction / spill / drop events live
+        # (per-pool lifetime books stay in PoolStats regardless)
+        self.telemetry = None
+
+    def _tinc(self, name: str, n: float = 1) -> None:
+        tel = self.telemetry
+        if tel is not None:
+            tel.registry.inc(name, n)
 
     # -- pool registry -------------------------------------------------------
     def pool(self, name: str, *,
@@ -542,6 +551,7 @@ class MemoryManager:
             self.device_used -= victim.nbytes
             vpool.stats.used -= victim.nbytes
             vpool.stats.evictions += 1
+            self._tinc(f"mem.evictions.{vpool.name}")
             victim.tier = "evicting"   # transient: not on any tier
             self._demote(vpool, victim)
             if victim.tier == DROPPED:
@@ -564,6 +574,7 @@ class MemoryManager:
             self.host_used -= victim.nbytes
             vpool.stats.spilled_bytes -= victim.nbytes
             vpool.stats.drops += 1
+            self._tinc(f"mem.drops.{vpool.name}")
             victim.tier = DROPPED
             del vpool.entries[victim.key]
 
@@ -585,17 +596,22 @@ class MemoryManager:
                     payload = pool.spill_fn(entry.payload)
                 except Exception as exc:   # incl. InjectedFault
                     pool.stats.spill_failures += 1
+                    self._tinc(f"mem.spill_failures.{pool.name}")
                     self.journal.commit(rec, note=f"failed: {exc!r}")
                 else:
                     entry.payload = payload
                     entry.tier = HOST
                     self.host_used += entry.nbytes
                     pool.stats.spilled_bytes += entry.nbytes
+                    self._tinc(f"mem.spills.{pool.name}")
+                    self._tinc(f"mem.spilled_bytes.{pool.name}",
+                               entry.nbytes)
                     self.journal.commit(rec)
                     return
         entry.payload = None
         entry.tier = DROPPED
         pool.stats.drops += 1
+        self._tinc(f"mem.drops.{pool.name}")
 
 
 class PidPool:

@@ -21,6 +21,7 @@ from .identify import identify_similar_subexpressions
 from .mckp import MCKPSolution, solve_mckp
 from .plan import PlanNode
 from .rewrite import RewrittenBatch, Rewriter, rewrite_batch
+from .telemetry import NOOP_SPAN
 
 
 @dataclass
@@ -71,6 +72,7 @@ class MultiQueryOptimizer:
         chain_cache_plans: bool = True,
         partitioner: Optional[Callable[[CoveringExpression],
                                        Optional[tuple]]] = None,
+        tracer=None,
     ):
         self.cost_model = cost_model
         self.rewriter = rewriter
@@ -84,6 +86,14 @@ class MultiQueryOptimizer:
         # repro.relational.partition.make_ce_partitioner); returns
         # (plan_record, [slices]) or None
         self.partitioner = partitioner
+        # optional SpanTracer (repro.core.telemetry): phase-level spans
+        # for the identify / solve stages when tracing is enabled
+        self.tracer = tracer
+
+    def _span(self, name: str, **attrs):
+        if self.tracer is not None and self.tracer.enabled:
+            return self.tracer.span(name, **attrs)
+        return NOOP_SPAN
 
     def optimize(self, plans: Sequence[PlanNode], *,
                  resident: Optional[Mapping[bytes, object]] = None,
@@ -127,19 +137,22 @@ class MultiQueryOptimizer:
         hinted = hinted or frozenset()
 
         # Phase 1: similar subexpression identification (Algorithm 1).
-        if (res or hinted) and self.k > 1:
-            # one k=1 walk, partitioned: the >= k SEs are exactly what
-            # identify(k=self.k) returns (k only filters at the end),
-            # and sub-k SEs whose structure matches a resident CE (or a
-            # cache hint) are admitted too, so the strict content check
-            # below can decide single-query resident resume
-            every = identify_similar_subexpressions(plans, k=1)
-            ses = [se for se in every if se.m >= self.k]
-            ses += [se for se in every
-                    if se.m < self.k and (se.psi in res
-                                          or se.psi in hinted)]
-        else:
-            ses = identify_similar_subexpressions(plans, k=self.k)
+        with self._span("mqo.identify", n_queries=len(plans)) as sp:
+            if (res or hinted) and self.k > 1:
+                # one k=1 walk, partitioned: the >= k SEs are exactly
+                # what identify(k=self.k) returns (k only filters at
+                # the end), and sub-k SEs whose structure matches a
+                # resident CE (or a cache hint) are admitted too, so
+                # the strict content check below can decide
+                # single-query resident resume
+                every = identify_similar_subexpressions(plans, k=1)
+                ses = [se for se in every if se.m >= self.k]
+                ses += [se for se in every
+                        if se.m < self.k and (se.psi in res
+                                              or se.psi in hinted)]
+            else:
+                ses = identify_similar_subexpressions(plans, k=self.k)
+            sp.set(n_ses=len(ses))
         report.n_ses = len(ses)
 
         # Phase 2a: covering expressions (+ plan-type specific transform:
@@ -231,7 +244,11 @@ class MultiQueryOptimizer:
             1 for it in items if isinstance(it, PartitionKnapsackItem))
 
         # Phase 3: sharing-plan selection (MCKP, Eq. 5).
-        solution = solve_mckp(items, self.budget)
+        with self._span("mqo.solve", n_items=len(items),
+                        budget=self.budget) as sp:
+            solution = solve_mckp(items, self.budget)
+            sp.set(selected_value=solution.total_value,
+                   selected_weight=solution.total_weight)
         for it in solution.items:
             if isinstance(it, PartitionKnapsackItem):
                 have = it.ce.admitted_partitions or frozenset()

@@ -12,6 +12,10 @@ from .datagen import (generate_columns, make_storage, people_schema,
                       synthetic_schema)
 from .executor import BatchResult, QueryResult, Session
 from .fuse import FusedPipeline, fuse_plan, unfuse_plan
+from .observe import (EXPLAIN_CE_KEYS, EXPLAIN_DONE_KEYS,
+                      EXPLAIN_DONE_OPTIONAL_KEYS, EXPLAIN_FAILED_KEYS,
+                      ExplainCE, ExplainReport, Telemetry,
+                      build_metrics_report)
 from .partition import (CePartition, PartitionInfo, PartitionedCePlan,
                         Partitioning, make_ce_partitioner, partition_table,
                         prune_parts)

@@ -34,6 +34,7 @@ from ..core.optimizer import OptimizedBatch
 from . import expr as E
 from . import logical as L
 from .canonical import subsumption_residual
+from .observe import Telemetry
 from .partition import Partitioning, linear_scan_chain, partition_table
 from .fuse import unfuse_plan
 from .physical import ExecContext, ExecMetrics, TableStorage, execute
@@ -241,6 +242,33 @@ class Session:
             config.resilience.faults)
         self.memory.faults = self.fault_injector
         self._sleep = time.sleep
+        # -- telemetry (PR 9, ROADMAP "Observability") ---------------------
+        # always-on metrics registry + cost-model calibration log; span
+        # tracing stays the no-op singleton until enable_tracing().
+        # The memory manager, fault injector, and cost model all feed
+        # the same hub, so metrics_report() has ONE source of truth.
+        self._telemetry = Telemetry()
+        self.memory.telemetry = self._telemetry
+        self.cost_model.calibration_log = self._telemetry.calibration
+        if self.fault_injector is not None:
+            self.fault_injector.registry = self._telemetry.registry
+
+    def telemetry(self) -> Telemetry:
+        """The session's observability hub: metrics registry, span
+        tracer (``.enable_tracing()`` to collect spans), calibration
+        log, and trace exporters (see relational.observe)."""
+        return self._telemetry
+
+    def enable_tracing(self, clock=None):
+        """Turn on query-lifecycle span tracing; returns the tracer."""
+        return self._telemetry.enable_tracing(clock)
+
+    def metrics_report(self) -> dict:
+        """The unified observability report (PR 9) — see
+        :func:`~repro.relational.observe.build_metrics_report`."""
+        from .observe import build_metrics_report
+
+        return build_metrics_report(self)
 
     @classmethod
     def from_config(cls, config: SessionConfig) -> "Session":

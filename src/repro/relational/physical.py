@@ -38,8 +38,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.cache import CacheManager
+from ..core.costmodel import CalibrationSample
 from ..core.faults import DegradationEvent
 from ..core.memory import MemoryPool
+from ..core.telemetry import NOOP_SPAN
 from . import expr as E
 from . import logical as L
 from .canonical import subsumes as _subsumes
@@ -197,10 +199,22 @@ class ExecContext:
     # bitset read degrades to stats-only pruning here instead of
     # surfacing — a pid hit is an optimization, never a failure domain)
     degradations: list = field(default_factory=list)
+    # optional relational.observe.Telemetry (PR 9): calibration samples
+    # on CE materializations / cached reads, spans on H2D + dispatch
+    # when tracing is enabled.  None for standalone contexts.
+    telemetry: Optional[object] = None
 
     def check_fault(self, point: str, key=None) -> None:
         if self.faults is not None:
             self.faults.check(point, key=key)
+
+    def span(self, name: str, **attrs):
+        """A lifecycle span when tracing is on; the shared no-op
+        context manager otherwise (zero allocations)."""
+        tel = self.telemetry
+        if tel is not None and tel.tracer.enabled:
+            return tel.tracer.span(name, **attrs)
+        return NOOP_SPAN
 
     def _memo_put(self, key: tuple, table: "Table") -> bool:
         allowance = float("inf")
@@ -252,7 +266,8 @@ class ExecContext:
             cost_model=cost_model,
             scan_cache=scan_cache,
             pid_cache=pid_cache,
-            faults=getattr(cfg, "fault_injector", None))
+            faults=getattr(cfg, "fault_injector", None),
+            telemetry=getattr(cfg, "_telemetry", None))
 
 
 # ---------------------------------------------------------------------------
@@ -414,14 +429,15 @@ def _agg_seg_ids(nrows, *keys):
 # ---------------------------------------------------------------------------
 def _device_put(arr: np.ndarray, ctx: ExecContext) -> jnp.ndarray:
     ctx.check_fault("scan_h2d")
-    if ctx.disk_latency_per_byte:
-        time.sleep(arr.nbytes * ctx.disk_latency_per_byte)
-    if ctx.sharding is not None and arr.ndim >= 1:
-        try:
-            return jax.device_put(arr, ctx.sharding)
-        except ValueError:
-            pass
-    return jnp.asarray(arr)
+    with ctx.span("scan.h2d", nbytes=int(arr.nbytes)):
+        if ctx.disk_latency_per_byte:
+            time.sleep(arr.nbytes * ctx.disk_latency_per_byte)
+        if ctx.sharding is not None and arr.ndim >= 1:
+            try:
+                return jax.device_put(arr, ctx.sharding)
+            except ValueError:
+                pass
+        return jnp.asarray(arr)
 
 
 def _pad_rows(arr: np.ndarray, cap: int) -> np.ndarray:
@@ -1488,31 +1504,35 @@ def execute_window_batched(groups, ctx: ExecContext):
     results: Dict[int, Table] = {}
     seconds: Dict[int, float] = {}
     failures: Dict[int, Exception] = {}
-    prepped = []
-    for g in groups:
-        t0 = time.perf_counter()
-        try:
-            prepped.append((g, _prepare_group(g, ctx),
-                            time.perf_counter() - t0))
-        except Exception as exc:
-            for m in g:
-                failures[m.pos] = exc
-    for g, prep, dt0 in prepped:
-        t0 = time.perf_counter()
-        try:
-            outs = _finalize_group(g, prep, ctx)
-            for t in outs:
-                jax.block_until_ready(list(t.columns.values()))
-        except Exception as exc:
-            for m in g:
-                failures[m.pos] = exc
-            continue
-        dt = dt0 + (time.perf_counter() - t0)
-        ctx.metrics.add_time("fused", dt)
-        per = dt / len(g)
-        for m, t in zip(g, outs):
-            results[m.pos] = t
-            seconds[m.pos] = per
+    with ctx.span("dispatch.batched", n_groups=len(groups),
+                  n_queries=sum(len(g) for g in groups)):
+        prepped = []
+        for g in groups:
+            t0 = time.perf_counter()
+            try:
+                prepped.append((g, _prepare_group(g, ctx),
+                                time.perf_counter() - t0))
+            except Exception as exc:
+                for m in g:
+                    failures[m.pos] = exc
+        for g, prep, dt0 in prepped:
+            t0 = time.perf_counter()
+            try:
+                with ctx.span("dispatch.batched.finalize",
+                              n_members=len(g)):
+                    outs = _finalize_group(g, prep, ctx)
+                    for t in outs:
+                        jax.block_until_ready(list(t.columns.values()))
+            except Exception as exc:
+                for m in g:
+                    failures[m.pos] = exc
+                continue
+            dt = dt0 + (time.perf_counter() - t0)
+            ctx.metrics.add_time("fused", dt)
+            per = dt / len(g)
+            for m, t in zip(g, outs):
+                results[m.pos] = t
+                seconds[m.pos] = per
     return results, seconds, failures
 
 
@@ -1651,6 +1671,34 @@ def _partitioned_ce_table(psi: bytes, ctx: ExecContext) -> Table:
     return out
 
 
+def _record_calibration(ctx: ExecContext, kind: str, psi: bytes, plan,
+                        seconds: float, table: Table) -> None:
+    """Cost-model accuracy accounting: one predicted-vs-measured sample
+    per CE materialization / cached read, fed to the session's
+    :class:`~repro.core.costmodel.CalibrationLog` (PR 9).  Best-effort —
+    a model that can't price the plan just skips the sample."""
+    tel = ctx.telemetry
+    cm = ctx.cost_model
+    if tel is None or cm is None:
+        return
+    try:
+        if kind == "materialize":
+            predicted = cm.execution_cost(plan) + cm.write_cost(plan)
+        else:
+            predicted = cm.read_cost(plan)
+        sample = CalibrationSample(
+            kind=kind, key=psi.hex()[:12],
+            predicted_cost=float(predicted),
+            measured_seconds=float(seconds),
+            predicted_bytes=int(cm.output_bytes(plan)),
+            measured_bytes=int(table.nbytes),
+            predicted_rows=int(cm.output_rows(plan)),
+            measured_rows=int(table.nrows))
+    except Exception:
+        return
+    tel.calibration.record(sample)
+
+
 def _materialize_cache(node: L.Cache, ctx: ExecContext, req) -> Table:
     assert ctx.cache is not None, "cache plan requires a CacheManager"
     existing = ctx.cache.get(node.psi)
@@ -1666,11 +1714,15 @@ def _materialize_cache(node: L.Cache, ctx: ExecContext, req) -> Table:
     try:
         if node.psi in ctx.partitioned_ces:
             return _partitioned_ce_table(node.psi, ctx)
-        table = _exec(node.child, ctx, req)
-        ctx.check_fault("ce_admission", key=node.psi)
-        ctx.cache.put(node.psi, table, nbytes=table.nbytes,
-                      est_bytes=table.logical_nbytes,
-                      benefit=ctx.cache_values.get(node.psi, 0.0))
+        t0 = time.perf_counter()
+        with ctx.span("ce.materialize", psi=node.psi):
+            table = _exec(node.child, ctx, req)
+            ctx.check_fault("ce_admission", key=node.psi)
+            ctx.cache.put(node.psi, table, nbytes=table.nbytes,
+                          est_bytes=table.logical_nbytes,
+                          benefit=ctx.cache_values.get(node.psi, 0.0))
+        _record_calibration(ctx, "materialize", node.psi, node.child,
+                            time.perf_counter() - t0, table)
     except CEMaterializationError:
         raise
     except Exception as exc:
@@ -1683,11 +1735,17 @@ def _cached_scan_table(node: L.CachedScan, ctx: ExecContext) -> Table:
     """The full covering relation behind a CachedScan (materializing on
     first touch: Spark cache() is a transformation — §6.3 footnote 5)."""
     assert ctx.cache is not None
+    t0 = time.perf_counter()
     table = ctx.cache.get(node.psi)
     if table is not None:
         # whole resident entry — serves even if this window re-planned
         # the CE as partition-grained (see _materialize_cache)
         ctx.metrics.bytes_cached_read += table.nbytes
+        if ctx.telemetry is not None:
+            plan = ctx.cache_plans.get(node.psi)
+            if plan is not None:
+                _record_calibration(ctx, "cached_read", node.psi, plan,
+                                    time.perf_counter() - t0, table)
         return table
     if node.psi in ctx.failed_ces:
         # poisoned earlier this window: fail fast so the service reruns

@@ -53,12 +53,14 @@ from dataclasses import dataclass, field, replace
 from typing import Any, Dict, List, Optional, Sequence, Set
 
 from ..core.faults import DegradationEvent, InjectedFault
-from ..core.fingerprint import fingerprint_set
+from ..core.fingerprint import fingerprint, fingerprint_set
 from ..core.optimizer import MultiQueryOptimizer
 from ..core.rewrite import attach_recompute_plan
+from ..core.telemetry import NOOP_SPAN
 from . import expr as E
 from . import logical as L
 from .canonical import canonicalize_plan
+from .observe import ExplainCE, ExplainReport, build_metrics_report
 from .rewriter import RelationalRewriter, make_ce_transform
 from .rules import optimize_single
 
@@ -285,7 +287,8 @@ class QueryHandle:
     logical tree the window optimizes."""
 
     __slots__ = ("plan", "node", "hint_cache", "seq", "_service",
-                 "_query_result", "_explain", "_done", "_error")
+                 "_query_result", "_explain", "_done", "_error",
+                 "_t_submit", "_family")
 
     def __init__(self, service: "QueryService", plan, seq: int, *,
                  node: Optional[L.Node] = None, hint_cache: bool = False):
@@ -298,6 +301,8 @@ class QueryHandle:
         self._explain = None
         self._done = False
         self._error: Optional[QueryError] = None
+        self._t_submit: Optional[float] = None    # service clock time
+        self._family: Optional[str] = None        # loose psi hex (12)
 
     @property
     def done(self) -> bool:
@@ -347,14 +352,29 @@ class QueryHandle:
                 "query still pending — call result(), flush() or poll()")
         if callable(self._explain):
             self._explain = self._explain()
+        if isinstance(self._explain, ExplainReport):
+            return self._explain.as_dict()
         return dict(self._explain)
 
-    def _resolve(self, query_result, explain: dict) -> None:
+    def explain_report(self) -> ExplainReport:
+        """The typed report behind :meth:`explain` (PR 9): one stable
+        :class:`~repro.relational.observe.ExplainReport` schema instead
+        of the ad-hoc dicts of PRs 3-8.  ``explain()`` stays the thin
+        dict compat view over this object."""
+        if not self._done:
+            raise RuntimeError(
+                "query still pending — call result(), flush() or poll()")
+        if callable(self._explain):
+            self._explain = self._explain()
+        assert isinstance(self._explain, ExplainReport)
+        return self._explain
+
+    def _resolve(self, query_result, explain) -> None:
         self._query_result = query_result
         self._explain = explain
         self._done = True
 
-    def _resolve_error(self, error: "QueryError", explain: dict) -> None:
+    def _resolve_error(self, error: "QueryError", explain) -> None:
         self._error = error
         self._explain = explain
         self._done = True
@@ -399,6 +419,26 @@ class QueryService:
         self._opened_at: Optional[float] = None
         self._n_windows = 0
         self._n_submitted = 0
+        self._last_submit: Optional[float] = None   # inter-arrival EWMA
+
+    # -- observability -------------------------------------------------------
+    def telemetry(self):
+        """The owning session's
+        :class:`~repro.relational.observe.Telemetry` hub."""
+        return self.session.telemetry()
+
+    def metrics_report(self) -> dict:
+        """The unified observability report (PR 9): registry snapshot,
+        per-template-family latency percentiles, pool occupancy + hit
+        rates, fault-injector telemetry, and the cost model's
+        predicted-vs-actual calibration table."""
+        return build_metrics_report(self.session)
+
+    def _span(self, name: str, **attrs):
+        tel = getattr(self.session, "_telemetry", None)
+        if tel is not None and tel.tracer.enabled:
+            return tel.tracer.span(name, **attrs)
+        return NOOP_SPAN
 
     # -- submission ----------------------------------------------------------
     def submit(self, plan) -> QueryHandle:
@@ -415,12 +455,22 @@ class QueryService:
         node, hint = _coerce_submission(plan, "QueryService.submit")
         handle = QueryHandle(self, plan, self._n_submitted, node=node,
                              hint_cache=hint)
+        now = self._clock()
+        handle._t_submit = now
+        tel = getattr(self.session, "_telemetry", None)
+        if tel is not None:
+            tel.registry.inc("queries.submitted")
+            if self._last_submit is not None:
+                tel.registry.ewma("arrival.interval_s").observe(
+                    now - self._last_submit)
+            self._last_submit = now
         self._n_submitted += 1
-        if not self._pending:
-            self._opened_at = self._clock()
-        self._pending.append(handle)
-        if len(self._pending) >= self.max_batch:
-            self.flush()
+        with self._span("submit", seq=handle.seq):
+            if not self._pending:
+                self._opened_at = now
+            self._pending.append(handle)
+            if len(self._pending) >= self.max_batch:
+                self.flush()
         return handle
 
     def poll(self) -> bool:
@@ -474,6 +524,12 @@ class QueryService:
                 _coerce_submission(p, "Session.run_batch", stacklevel=4))
         handles = [QueryHandle(self, p, -1, node=n, hint_cache=h)
                    for p, (n, h) in zip(plans, coerced)]
+        now = self._clock()
+        for h in handles:
+            h._t_submit = now     # pre-closed: latency == window time
+        tel = getattr(self.session, "_telemetry", None)
+        if tel is not None:
+            tel.registry.inc("queries.submitted", len(handles))
         return self._run_window(handles, mqo=mqo, k=k,
                                 budget_bytes=budget_bytes,
                                 locally_optimize=locally_optimize)
@@ -504,24 +560,28 @@ class QueryService:
         window = self._n_windows
         self._n_windows += 1
         res = getattr(sess, "resilience", None)
-        try:
-            batch = self._run_window_inner(
-                handles, window, mqo=mqo, k=k, budget_bytes=budget_bytes,
-                locally_optimize=locally_optimize)
-        except BaseException as exc:
-            self._resolve_window_error(handles, exc, window)
-            self._audit_after_window(sess, res, None)
-            if (res is not None and res.isolate
-                    and isinstance(exc, Exception)):
-                from .executor import BatchResult
+        with self._span("window", window=window,
+                        n_queries=len(handles)) as wsp:
+            try:
+                batch = self._run_window_inner(
+                    handles, window, mqo=mqo, k=k,
+                    budget_bytes=budget_bytes,
+                    locally_optimize=locally_optimize)
+            except BaseException as exc:
+                wsp.set(error=repr(exc))
+                self._resolve_window_error(handles, exc, window)
+                self._audit_after_window(sess, res, None)
+                if (res is not None and res.isolate
+                        and isinstance(exc, Exception)):
+                    from .executor import BatchResult
 
-                batch = BatchResult([None] * len(handles), 0.0)
-                batch.resilience = {"window_error": repr(exc),
-                                    "n_failed": len(handles)}
-                return batch
-            raise
-        self._audit_after_window(sess, res, batch)
-        return batch
+                    batch = BatchResult([None] * len(handles), 0.0)
+                    batch.resilience = {"window_error": repr(exc),
+                                        "n_failed": len(handles)}
+                    return batch
+                raise
+            self._audit_after_window(sess, res, batch)
+            return batch
 
     def _run_window_inner(self, handles: List[QueryHandle], window: int,
                           *, mqo, k, budget_bytes, locally_optimize):
@@ -568,17 +628,25 @@ class QueryService:
         errors: Dict[int, BaseException] = {}
         events: Dict[int, List[DegradationEvent]] = {
             i: [] for i in range(n)}
-        for i, h in enumerate(handles):
-            try:
-                p = canonicalize_plan(h.node)
-                if local:
-                    p = canonicalize_plan(optimize_single(p))
-                plans[i] = p
-            except Exception as exc:
-                if not isolate:
-                    raise
-                errors[i] = exc
+        with self._span("canonicalize", n_queries=n):
+            for i, h in enumerate(handles):
+                try:
+                    p = canonicalize_plan(h.node)
+                    if local:
+                        p = canonicalize_plan(optimize_single(p))
+                    plans[i] = p
+                except Exception as exc:
+                    if not isolate:
+                        raise
+                    errors[i] = exc
         live = [i for i in range(n) if i not in errors]
+        tel = getattr(sess, "_telemetry", None)
+        if tel is not None:
+            # template family = loose structural fingerprint of the
+            # canonical plan (the recurring-template key): per-family
+            # latency histograms are observed at resolve time
+            for i in live:
+                handles[i]._family = fingerprint(plans[i]).hex()[:12]
 
         optimized = None
         ces: list = []
@@ -635,6 +703,8 @@ class QueryService:
                 max_compound_size=sess.config.mqo.max_compound_size,
                 chain_cache_plans=sess.config.mqo.chain_cache_plans,
                 partitioner=partitioner,
+                tracer=(tel.tracer if tel is not None and tel.tracing
+                        else None),
             )
             # loose psi -> strict fingerprints of every resident
             # covering relation with that structure (a zero planning
@@ -647,9 +717,13 @@ class QueryService:
                 for sfp, psi in sess._resident_index.items():
                     resident.setdefault(psi, set()).add(sfp)
                 resident_parts = sess.ce_resident_parts()
-            optimized = optimizer.optimize(
-                [plans[i] for i in live], resident=resident,
-                resident_parts=resident_parts, hinted=hinted)
+            with self._span("mqo", window=window,
+                            n_live=len(live)) as msp:
+                optimized = optimizer.optimize(
+                    [plans[i] for i in live], resident=resident,
+                    resident_parts=resident_parts, hinted=hinted)
+                msp.set(n_selected=optimized.report.n_selected,
+                        selected_weight=optimized.report.selected_weight)
 
             ces = optimized.rewritten.ces
             # strict keys cannot collide across content, so no
@@ -738,36 +812,40 @@ class QueryService:
         # (and every batch failure) falls through to the per-query loop
         batched_done: Set[int] = set()
         shared_dispatch: Dict[int, List[int]] = {}
-        if getattr(sess, "window_batch", True) and len(live) >= 2:
-            batched_done, shared_dispatch = self._exec_batched(
-                sess, ctx, live, executed, results, events)
-        for i in live:
-            if i in batched_done:
-                continue
-            try:
-                results[i] = sess.run_one_resilient(
-                    executed[i], ctx, query=i, events=events[i])
-            except CEMaterializationError as exc:
-                # a shared CE is poisoned: rerun THIS consumer on its
-                # unshared residual plan (the pre-rewrite canonical
-                # tree).  Sibling consumers fail fast on the poisoned ψ
-                # and fall back the same way, independently.
-                events[i].append(DegradationEvent(
-                    query=i, attempt=len(events[i]) + 1,
-                    action="fallback", level="residual",
-                    error=repr(exc)))
+        with self._span("execute", window=window,
+                        n_live=len(live)) as xsp:
+            if getattr(sess, "window_batch", True) and len(live) >= 2:
+                batched_done, shared_dispatch = self._exec_batched(
+                    sess, ctx, live, executed, results, events)
+            xsp.set(n_batched=len(batched_done))
+            for i in live:
+                if i in batched_done:
+                    continue
                 try:
                     results[i] = sess.run_one_resilient(
-                        plans[i], ctx, query=i, events=events[i])
-                    executed[i] = plans[i]
-                except Exception as exc2:
+                        executed[i], ctx, query=i, events=events[i])
+                except CEMaterializationError as exc:
+                    # a shared CE is poisoned: rerun THIS consumer on
+                    # its unshared residual plan (the pre-rewrite
+                    # canonical tree).  Sibling consumers fail fast on
+                    # the poisoned ψ and fall back the same way,
+                    # independently.
+                    events[i].append(DegradationEvent(
+                        query=i, attempt=len(events[i]) + 1,
+                        action="fallback", level="residual",
+                        error=repr(exc)))
+                    try:
+                        results[i] = sess.run_one_resilient(
+                            plans[i], ctx, query=i, events=events[i])
+                        executed[i] = plans[i]
+                    except Exception as exc2:
+                        if not isolate:
+                            raise
+                        errors[i] = exc2
+                except Exception as exc:
                     if not isolate:
                         raise
-                    errors[i] = exc2
-            except Exception as exc:
-                if not isolate:
-                    raise
-                errors[i] = exc
+                    errors[i] = exc
         total = time.perf_counter() - t0
 
         batch = BatchResult(
@@ -794,14 +872,28 @@ class QueryService:
         if injector is not None:
             rep["faults"] = injector.report()
         batch.resilience = rep
+        if tel is not None:
+            # the ONE place window degradation/retry events and
+            # per-window ExecMetrics enter the session-lifetime books
+            for ev in all_events:
+                tel.record_event(ev)
+            tel.absorb_exec_metrics(ctx.metrics)
+            tel.registry.inc("windows.closed")
+            tel.registry.inc("queries.executed", len(live))
+            tel.registry.histogram(
+                "window.size",
+                edges=tuple(float(x) for x in range(1, 65))).observe(n)
+            tel.registry.observe("window.seconds", total)
         ce_by_key = {ce.strict_psi(): ce for ce in ces}
-        self._resolve(handles, batch, window, mqo=bool(mqo), k=k,
-                      executed_plans=executed, ce_by_key=ce_by_key,
-                      pre_resident=pre_resident, errors=errors,
-                      events=events, ctx=ctx,
-                      shared_dispatch=shared_dispatch,
-                      subsumed=subsumed,
-                      pid_log=dict(getattr(ctx, "pid_prune_log", {})))
+        with self._span("resolve", window=window):
+            self._resolve(
+                handles, batch, window, mqo=bool(mqo), k=k,
+                executed_plans=executed, ce_by_key=ce_by_key,
+                pre_resident=pre_resident, errors=errors,
+                events=events, ctx=ctx,
+                shared_dispatch=shared_dispatch,
+                subsumed=subsumed,
+                pid_log=dict(getattr(ctx, "pid_prune_log", {})))
         return batch
 
     @staticmethod
@@ -878,10 +970,22 @@ class QueryService:
         shared_dispatch = shared_dispatch or {}
         subsumed = subsumed or {}
         pid_log = pid_log or {}
+        tel = getattr(self.session, "_telemetry", None)
+        now = self._clock() if tel is not None else 0.0
         for i, (h, qr) in enumerate(zip(handles, batch.results)):
             if h._done:
                 continue
-            if i in errors or qr is None:
+            failed = i in errors or qr is None
+            if tel is not None:
+                tel.registry.inc("queries.failed" if failed
+                                 else "queries.succeeded")
+                if h._t_submit is not None:
+                    lat = max(now - h._t_submit, 0.0)
+                    tel.registry.observe("latency.all", lat)
+                    if h._family:
+                        tel.registry.observe(
+                            f"latency.family.{h._family}", lat)
+            if failed:
                 exc = errors.get(i, RuntimeError("query was not executed"))
                 err, explain = self._failure_state(
                     h, exc, window, i, n, events.get(i, ()),
@@ -915,32 +1019,32 @@ class QueryService:
             exception=exc, window=window, position=position,
             attempts=max([e["attempt"] for e in evs], default=1),
             events=evs, salvaged_ces=salvaged)
-        explain = {
-            "status": "failed",
-            "window": window,
-            "position": position,
-            "window_size": n,
-            "error": repr(exc),
-            "events": evs,
-            "ces_salvaged": salvaged,
-            "ces_failed": failed_ces,
-            "submitted": L.explain(handle.node),
-        }
+        explain = ExplainReport(
+            status="failed", window=window, position=position,
+            window_size=n, error=repr(exc), events=tuple(evs),
+            ces_salvaged=tuple(salvaged), ces_failed=tuple(failed_ces),
+            submitted=L.explain(handle.node))
         return err, explain
 
-    @staticmethod
-    def _resolve_window_error(handles, exc, window) -> None:
+    def _resolve_window_error(self, handles, exc, window) -> None:
         """Safety net: resolve every still-pending handle of a window
         that died outside the per-query execution loop."""
         n = len(handles)
+        tel = getattr(self.session, "_telemetry", None)
         for i, h in enumerate(handles):
             if h._done:
                 continue
+            if tel is not None:
+                tel.registry.inc("queries.failed")
+            try:
+                submitted = L.explain(h.node)
+            except Exception:
+                submitted = ""
             h._resolve_error(
                 QueryError(exception=exc, window=window, position=i),
-                {"status": "failed", "window": window, "position": i,
-                 "window_size": n, "error": repr(exc), "events": [],
-                 "ces_salvaged": [], "ces_failed": []})
+                ExplainReport(status="failed", window=window,
+                              position=i, window_size=n,
+                              error=repr(exc), submitted=submitted))
 
     @staticmethod
     def _audit_after_window(sess, res, batch) -> None:
@@ -993,51 +1097,50 @@ class _LazyExplain:
         # bitset intersection pruned beyond statistics
         self.pid_log = pid_log or {}
 
-    def __call__(self) -> dict:
+    def __call__(self) -> ExplainReport:
         ce_reports = []
         for key in _cached_scan_keys(self.executed_plan):
             ce = self.ce_by_key.get(key)
             if ce is None:
                 continue           # e.g. full-relation keys (not a CE)
             resident_repriced = bool(ce.cost_detail.get("resident", False))
-            entry = {
-                "psi": ce.psi.hex()[:12],
-                "strict_psi": key.hex()[:12],
-                "label": ce.tree.label,
-                "m": ce.m,
-                "value": float(ce.value),
-                "weight": int(ce.weight),
-                "resident_repriced": resident_repriced,
-                "cache_hit": key in self.pre_resident,
-                "single_resume": resident_repriced and ce.m < self.k,
-            }
+            entry = ExplainCE(
+                psi=ce.psi.hex()[:12],
+                strict_psi=key.hex()[:12],
+                label=ce.tree.label,
+                m=ce.m,
+                value=float(ce.value),
+                weight=int(ce.weight),
+                resident_repriced=resident_repriced,
+                cache_hit=key in self.pre_resident,
+                single_resume=resident_repriced and ce.m < self.k,
+            )
             if ce.partition_detail is not None:
                 pplan, _ = ce.partition_detail
-                entry["partitions"] = {
+                entry.partitions = {
                     "live": list(pplan.live),
                     "admitted": sorted(ce.admitted_partitions or ()),
                 }
             ce_reports.append(entry)
-        out = {
-            "status": "done",
-            "window": self.window,
-            "position": self.position,
-            "window_size": self.window_size,
-            "mqo": self.mqo,
-            "seconds": self.qr.seconds,
-            "plan": L.explain(self.qr.plan),
-            "submitted": L.explain(self.handle.plan),
-            "ces": ce_reports,
-            "resident_reuse": any(c["cache_hit"] for c in ce_reports),
-            "subsumption_hit": self.subsumption is not None,
-            "pid_pruned_parts": _pid_pruned_for(self.executed_plan,
-                                                self.pid_log),
-        }
-        if self.subsumption is not None:
-            out["subsumption"] = dict(self.subsumption)
-        if self.shared_dispatch:
-            out["shared_dispatch"] = list(self.shared_dispatch)
-        return out
+        return ExplainReport(
+            status="done",
+            window=self.window,
+            position=self.position,
+            window_size=self.window_size,
+            mqo=self.mqo,
+            seconds=self.qr.seconds,
+            plan=L.explain(self.qr.plan),
+            submitted=L.explain(self.handle.plan),
+            ces=tuple(ce_reports),
+            resident_reuse=any(c.cache_hit for c in ce_reports),
+            subsumption_hit=self.subsumption is not None,
+            pid_pruned_parts=_pid_pruned_for(self.executed_plan,
+                                             self.pid_log),
+            subsumption=(dict(self.subsumption)
+                         if self.subsumption is not None else None),
+            shared_dispatch=(list(self.shared_dispatch)
+                             if self.shared_dispatch else None),
+        )
 
 
 def _subsumption_plan(plan: L.Node, strict: bytes, meta,

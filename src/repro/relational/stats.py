@@ -286,6 +286,16 @@ class RelationalCostModel:
         self.reg = reg
         self.c = consts or CostConstants()
         self.prune = prune
+        # predicted-vs-measured accuracy log, attached by the session's
+        # telemetry (core.costmodel.CalibrationLog); None until then
+        self.calibration_log = None
+
+    def calibration(self) -> dict:
+        """Predicted-vs-measured accuracy report (CE materializations
+        and cached reads recorded by the executor)."""
+        from ..core.costmodel import model_calibration
+
+        return model_calibration(self)
 
     # ---- cardinalities ----------------------------------------------------
     def output_rows(self, node: L.Node) -> int:

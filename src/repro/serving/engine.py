@@ -31,6 +31,7 @@ from ..core.candidates import generate_knapsack_items
 from ..core.costmodel import price_ces
 from ..core.covering import build_covering_expressions
 from ..core.mckp import solve_mckp
+from ..core.telemetry import NOOP_SPAN
 from ..models.config import ArchConfig
 from ..models.decoder import init_cache
 from ..models.model import decode_step
@@ -107,7 +108,8 @@ class ServingEngine:
                  pool_budget_bytes: int, block_size: int = 64,
                  max_len: int = 512, k: int = 2,
                  policy: str = "lru",
-                 retain_states: bool = True):
+                 retain_states: bool = True,
+                 telemetry=None):
         self.cfg = cfg
         self.params = params
         self.block_size = block_size
@@ -115,6 +117,10 @@ class ServingEngine:
         self.k = k
         self.cost_model = ServingCostModel(cfg)
         self.pool_budget = int(pool_budget_bytes)
+        # optional relational.observe.Telemetry (PR 9): phase spans +
+        # counters for the serving-side MQO; None costs one attribute
+        # check per batch
+        self.telemetry = telemetry
         # prefix states are admitted through the unified memory
         # hierarchy: HBM budget enforced by the manager, eviction under
         # pressure, spill tier = host DRAM offload of the KV/SSM state.
@@ -132,6 +138,14 @@ class ServingEngine:
             self.pool_budget, spill_fn=_state_to_host,
             unspill_fn=_state_to_device, manager=self.memory,
             pool="prefix")
+        if telemetry is not None:
+            self.memory.telemetry = telemetry
+
+    def _span(self, name: str, **attrs):
+        tel = self.telemetry
+        if tel is not None and tel.tracer.enabled:
+            return tel.tracer.span(name, **attrs)
+        return NOOP_SPAN
 
     def _fresh_cache(self, batch: int = 1):
         return init_cache(self.cfg, batch, self.max_len,
@@ -158,47 +172,54 @@ class ServingEngine:
             pool = CacheManager(self.pool_budget)
         if mqo:
             t0 = time.perf_counter()
-            ses = identify_shared_prefixes(requests, k=self.k)
+            with self._span("serving.identify",
+                            n_requests=len(requests)):
+                ses = identify_shared_prefixes(requests, k=self.k)
             report.n_ses = len(ses)
             ces = build_covering_expressions(ses)
             price_ces(ces, self.cost_model)
             items = generate_knapsack_items(ces)
-            sol = solve_mckp(items, self.pool_budget)
+            with self._span("serving.solve", n_items=len(items),
+                            budget=self.pool_budget):
+                sol = solve_mckp(items, self.pool_budget)
             report.optimize_seconds = time.perf_counter() - t0
             report.n_selected = len(sol.ces)
 
             # materialize admitted prefixes, chaining longer onto shorter
-            for ce in sorted(sol.ces, key=lambda c: c.tree.n_tokens):
-                chain: TokenBlock = ce.tree
-                if pool.touch(ce.psi):
-                    # cross-batch hit: the state is already materialized
-                    # (prefix fingerprints are content-exact), skip the
-                    # prefill entirely — the full CE value is saved.
-                    # touch() refreshes LRU recency (so the entry is not
-                    # this batch's next eviction victim) WITHOUT paying
-                    # an unspill: consumers unspill/promote on demand in
-                    # _resume_point.
+            with self._span("serving.materialize",
+                            n_selected=len(sol.ces)):
+                for ce in sorted(sol.ces, key=lambda c: c.tree.n_tokens):
+                    chain: TokenBlock = ce.tree
+                    if pool.touch(ce.psi):
+                        # cross-batch hit: the state is already
+                        # materialized (prefix fingerprints are
+                        # content-exact), skip the prefill entirely —
+                        # the full CE value is saved.  touch() refreshes
+                        # LRU recency (so the entry is not this batch's
+                        # next eviction victim) WITHOUT paying an
+                        # unspill: consumers unspill/promote on demand
+                        # in _resume_point.
+                        report.prefill_flops_saved += ce.value * (
+                            self.cost_model.chips * 1.0)
+                        continue
+                    anc_psi, anc_len = self._longest_cached_ancestor(
+                        chain, pool)
+                    if anc_psi is not None:
+                        cache, _ = pool.get(anc_psi)
+                    else:
+                        cache, anc_len = self._fresh_cache(), 0
+                    delta = chain.full_tokens()[anc_len:]
+                    cache, _ = _prefill_scan(
+                        self.params, cache, jnp.asarray(delta[None]),
+                        anc_len, self.cfg)
+                    report.tokens_prefilled += len(delta)
+                    pool.put(ce.psi, (cache, chain.n_tokens),
+                             nbytes=self.cost_model.state_bytes(
+                                 chain.n_tokens),
+                             est_bytes=ce.weight,
+                             benefit=max(float(ce.value), 0.0))
                     report.prefill_flops_saved += ce.value * (
                         self.cost_model.chips * 1.0)
-                    continue
-                anc_psi, anc_len = self._longest_cached_ancestor(
-                    chain, pool)
-                if anc_psi is not None:
-                    cache, _ = pool.get(anc_psi)
-                else:
-                    cache, anc_len = self._fresh_cache(), 0
-                delta = chain.full_tokens()[anc_len:]
-                cache, _ = _prefill_scan(
-                    self.params, cache, jnp.asarray(delta[None]),
-                    anc_len, self.cfg)
-                report.tokens_prefilled += len(delta)
-                pool.put(ce.psi, (cache, chain.n_tokens),
-                         nbytes=self.cost_model.state_bytes(
-                             chain.n_tokens),
-                         est_bytes=ce.weight,
-                         benefit=max(float(ce.value), 0.0))
-                report.prefill_flops_saved += ce.value * (
-                    self.cost_model.chips * 1.0)
 
         # rewrite + execute every request
         outputs: List[np.ndarray] = []
@@ -220,6 +241,13 @@ class ServingEngine:
 
         report.pool_used = pool.used_bytes
         report.wall_seconds = time.perf_counter() - t_wall
+        if self.telemetry is not None:
+            reg = self.telemetry.registry
+            reg.inc("serving.batches")
+            reg.inc("serving.requests", len(requests))
+            reg.inc("serving.tokens_prefilled", report.tokens_prefilled)
+            reg.inc("serving.tokens_prefilled_baseline",
+                    report.tokens_prefilled_baseline)
         return outputs, report
 
     # ------------------------------------------------------------------

@@ -683,6 +683,20 @@ class TestSoak:
         for point in FAULT_POINTS:
             assert inj.invocations(point) > 0, point
         assert n_ok > 0, "soak never completed a query"
+        # PR 9: the metrics registry mirrors the injector and the
+        # resolved-handle outcomes one-for-one, so soak telemetry can
+        # be asserted from ONE place
+        reg = sess.telemetry().registry
+        rep = inj.report()
+        assert reg.value("fault.fired.total") == rep["n_fired"]
+        for point, n in rep["fired"].items():
+            assert reg.value(f"fault.fired.{point}") == n, point
+        for point in FAULT_POINTS:
+            assert reg.value(f"fault.invocations.{point}") == \
+                inj.invocations(point), point
+        assert reg.value("fault.suppressed") == rep["suppressed"]
+        assert reg.value("queries.succeeded") == n_ok
+        assert reg.value("queries.failed") == n_failed
 
     def test_seeded_schedules_always_safe(self):
         # always-run fallback for the hypothesis property below
