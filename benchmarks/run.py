@@ -35,6 +35,9 @@ Prints ``name,us_per_call,derived`` CSV lines.
                           pool: fresh-literal drill-down stream served
                           from a WEAKER resident CE with zero
                           exact-fingerprint hits — PR 8)
+  bench_async             beyond-paper    (asyncio serving front:
+                          Poisson clients, adaptive vs fixed windows,
+                          per-tenant admission — PR 10)
   bench_serving_prefix    beyond-paper    (LLM prefix-cache MQO)
   roofline_report         assignment      (dry-run roofline terms)
 
@@ -67,6 +70,7 @@ MODULES = [
     "bench_window_batch",
     "bench_subsumption",
     "bench_telemetry",
+    "bench_async",
     "bench_serving_prefix",
     "roofline_report",
 ]

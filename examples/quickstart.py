@@ -195,6 +195,42 @@ def main():
     print(f"  resumes from CE {sub.get('strict_psi')} "
           f"with residual {sub.get('residual')}")
 
+    # -- async serving front (PR 10): concurrent clients, one session ---
+    # the asyncio front takes concurrent submissions on the event loop,
+    # a BACKGROUND task closes deadline windows (no caller needs to be
+    # in flight), and admission control charges each tenant's in-flight
+    # count and attributed pool bytes against its quota.  Execution
+    # still funnels through the one sync window path, so results are
+    # bit-identical to run_batch / QueryService.
+    import asyncio
+
+    from repro.relational import (AsyncConfig, AsyncQueryService,
+                                  TenantQuota)
+
+    async def serve():
+        cfg = AsyncConfig(
+            max_batch=3, max_wait_s=0.05,
+            quotas={"dash": TenantQuota(max_inflight=8),
+                    "adhoc": TenantQuota(max_inflight=1,
+                                         on_over="queue")})
+        async with AsyncQueryService(sess, config=cfg) as asvc:
+            handles = [await asvc.submit(q, tenant="dash")
+                       for q in (q1, q2, q3)]
+            ha = await asvc.submit(q3, tenant="adhoc")
+            tables = [await h for h in handles] + [await ha]
+            return tables, asvc.metrics_report()
+
+    atabs, arep = asyncio.run(serve())
+    same = all(a.row_multiset() == b.table.row_multiset()
+               for a, b in zip(atabs[:3], opt.results))
+    print(f"\nasync front: {len(atabs)} queries over 2 tenants, "
+          f"bit-identical to the batch run: {same}")
+    for t, row in sorted(arep["tenants"].items()):
+        print(f"  tenant {t}: submitted="
+              f"{row.get('queries.submitted', 0):.0f} "
+              f"bytes={row.get('bytes_total', 0)}B "
+              f"admission={row.get('admission')}")
+
 
 if __name__ == "__main__":
     main()

@@ -39,6 +39,12 @@ Named points (wired in ``relational.physical`` / ``core.memory`` /
     ``pid_pool``       a partition-ID bitset read (PR 8); a failure
                        degrades to stats-only pruning — a pid hit is an
                        optimization, never a failure domain
+    ``async_close``    the async front's background window-closer task
+                       (PR 10) closing a deadline-expired window; a
+                       fire crashes the closer task — the supervisor
+                       restarts it and the due window closes on the
+                       next pass, so every pending handle still
+                       resolves
 
 Configuration rides on ``SessionConfig.resilience.faults`` (a
 :class:`FaultConfig`); a session without one injects nothing and pays
@@ -52,7 +58,7 @@ from typing import Dict, List, Mapping, Optional, Tuple
 
 FAULT_POINTS = ("scan_h2d", "kernel_launch", "batched_launch",
                 "ce_admission", "spill_to_host", "window_close",
-                "pid_pool")
+                "pid_pool", "async_close")
 
 
 class TransientError(RuntimeError):

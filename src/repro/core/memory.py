@@ -64,6 +64,7 @@ from __future__ import annotations
 
 import time
 from collections import deque
+from contextlib import contextmanager
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterable, List, Optional
 
@@ -87,6 +88,10 @@ class MemoryEntry:
     hits: int = 0
     seq: int = 0                  # logical clock (policy="lru")
     created_at: float = field(default_factory=time.monotonic)
+    # per-tenant attribution (PR 10): the tenant whose query first
+    # materialized this entry ("first-toucher pays"); None == shared /
+    # untenanted.  Attribution only — eviction stays tenant-blind.
+    owner: Optional[str] = None
 
     @property
     def spilled(self) -> bool:    # CacheEntry-compat view
@@ -268,6 +273,43 @@ class MemoryManager:
         # metrics registry mirrors eviction / spill / drop events live
         # (per-pool lifetime books stay in PoolStats regardless)
         self.telemetry = None
+        # per-tenant attribution (PR 10): admissions while an owner is
+        # set (see ``owning``) stamp the entry with it
+        self.current_owner: Optional[str] = None
+
+    @contextmanager
+    def owning(self, owner: Optional[str]):
+        """Scope during which admissions are attributed to ``owner``
+        (the async front wraps each query's execution in the tenant
+        that submitted it).  ``None`` attributes to the shared pool."""
+        prev = self.current_owner
+        self.current_owner = owner
+        try:
+            yield
+        finally:
+            self.current_owner = prev
+
+    def owner_usage(self) -> Dict[str, Dict[str, int]]:
+        """``{owner: {pool: resident bytes}}`` over live (device + host)
+        entries — recomputed from the entries themselves on every call,
+        so attribution can never drift from the books the audit checks.
+        Entries with no owner (untenanted work) are omitted."""
+        out: Dict[str, Dict[str, int]] = {}
+        for name, pool in self.pools.items():
+            # list(): admissions may race this read from another thread
+            # (the async front's executor); a point-in-time copy is all
+            # attribution needs
+            for e in list(pool.entries.values()):
+                if e.owner is None or e.tier not in (DEVICE, HOST):
+                    continue
+                by_pool = out.setdefault(e.owner, {})
+                by_pool[name] = by_pool.get(name, 0) + e.nbytes
+        return out
+
+    def owner_bytes(self, owner: str) -> int:
+        """Total live bytes attributed to ``owner`` across all pools
+        (the quantity a TenantQuota's ``max_bytes`` is charged against)."""
+        return sum(self.owner_usage().get(owner, {}).values())
 
     def _tinc(self, name: str, n: float = 1) -> None:
         tel = self.telemetry
@@ -298,7 +340,8 @@ class MemoryManager:
         self._seq += 1
         entry = MemoryEntry(key=key, pool=pool.name, payload=payload,
                             nbytes=nbytes, est_bytes=int(est_bytes),
-                            benefit=float(benefit), seq=self._seq)
+                            benefit=float(benefit), seq=self._seq,
+                            owner=self.current_owner)
         pool.stats.admissions += 1
 
         if self.device_used + nbytes > self.device_budget:

@@ -33,18 +33,27 @@ even built.
 histograms (t-digest-free: percentiles are interpolated within
 log-spaced buckets, exact min/max tracked outside them).  Everything is
 create-on-first-use and snapshots to one plain dict.
+
+**Labels (PR 10).**  Every accessor takes an optional ``labels``
+mapping; a labeled series is a separate child metric stored under the
+canonical rendered key ``name{k=v,...}`` (label keys sorted), e.g.
+``queries.submitted{tenant=acme}``.  The rendering is the snapshot
+format — call sites never name-mangle — and :meth:`MetricsRegistry.series`
+gives structured access (label dict + rendered key per child) so
+report builders don't re-parse the rendered form.
 """
 from __future__ import annotations
 
 import json
 import time
 from bisect import bisect_left
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import (Any, Callable, Dict, List, Mapping, Optional,
+                    Sequence, Tuple)
 
 __all__ = [
     "Span", "SpanTracer", "NoopTracer", "NOOP_TRACER",
     "Counter", "Gauge", "Ewma", "Histogram", "MetricsRegistry",
-    "DEFAULT_LATENCY_EDGES",
+    "DEFAULT_LATENCY_EDGES", "labeled_key",
 ]
 
 
@@ -362,54 +371,101 @@ class Histogram:
         }
 
 
+def labeled_key(name: str,
+                labels: Optional[Mapping[str, Any]] = None) -> str:
+    """Canonical rendered key of a (possibly labeled) series:
+    ``name`` bare, or ``name{k=v,...}`` with label keys sorted.  This
+    is the snapshot's wire format — the ONE place label rendering
+    lives, so call sites never mangle names by hand."""
+    if not labels:
+        return name
+    inner = ",".join(f"{k}={labels[k]}" for k in sorted(labels))
+    return f"{name}{{{inner}}}"
+
+
 class MetricsRegistry:
-    """Create-on-first-use named metrics; one ``snapshot()`` dict."""
+    """Create-on-first-use named metrics; one ``snapshot()`` dict.
+
+    Labeled children (``labels={"tenant": "acme"}``) are independent
+    series keyed by :func:`labeled_key`; :meth:`series` enumerates a
+    name's children with their label dicts."""
 
     def __init__(self):
         self._counters: Dict[str, Counter] = {}
         self._gauges: Dict[str, Gauge] = {}
         self._ewmas: Dict[str, Ewma] = {}
         self._histograms: Dict[str, Histogram] = {}
+        # base name -> [(labels, rendered key)], insertion-ordered
+        self._series: Dict[str, List[Tuple[Dict[str, str], str]]] = {}
+
+    def _key(self, name: str,
+             labels: Optional[Mapping[str, Any]]) -> str:
+        if not labels:
+            return name
+        key = labeled_key(name, labels)
+        children = self._series.setdefault(name, [])
+        if all(k != key for _, k in children):
+            children.append(
+                ({k: str(v) for k, v in labels.items()}, key))
+        return key
+
+    def series(self, name: str) -> List[Tuple[Dict[str, str], str]]:
+        """Every labeled child of ``name`` as ``(labels, rendered
+        key)`` pairs, in first-use order (empty for unlabeled names)."""
+        return list(self._series.get(name, ()))
 
     # -- accessors (get-or-create) ------------------------------------------
-    def counter(self, name: str) -> Counter:
+    def counter(self, name: str,
+                labels: Optional[Mapping[str, Any]] = None) -> Counter:
+        name = self._key(name, labels)
         c = self._counters.get(name)
         if c is None:
             c = self._counters[name] = Counter()
         return c
 
-    def gauge(self, name: str) -> Gauge:
+    def gauge(self, name: str,
+              labels: Optional[Mapping[str, Any]] = None) -> Gauge:
+        name = self._key(name, labels)
         g = self._gauges.get(name)
         if g is None:
             g = self._gauges[name] = Gauge()
         return g
 
-    def ewma(self, name: str, alpha: float = 0.2) -> Ewma:
+    def ewma(self, name: str, alpha: float = 0.2,
+             labels: Optional[Mapping[str, Any]] = None) -> Ewma:
+        name = self._key(name, labels)
         e = self._ewmas.get(name)
         if e is None:
             e = self._ewmas[name] = Ewma(alpha)
         return e
 
     def histogram(self, name: str,
-                  edges: Optional[Sequence[float]] = None) -> Histogram:
+                  edges: Optional[Sequence[float]] = None,
+                  labels: Optional[Mapping[str, Any]] = None
+                  ) -> Histogram:
+        name = self._key(name, labels)
         h = self._histograms.get(name)
         if h is None:
             h = self._histograms[name] = Histogram(edges)
         return h
 
     # -- conveniences --------------------------------------------------------
-    def inc(self, name: str, n: float = 1) -> None:
-        self.counter(name).inc(n)
+    def inc(self, name: str, n: float = 1,
+            labels: Optional[Mapping[str, Any]] = None) -> None:
+        self.counter(name, labels=labels).inc(n)
 
-    def set_gauge(self, name: str, v: float) -> None:
-        self.gauge(name).set(v)
+    def set_gauge(self, name: str, v: float,
+                  labels: Optional[Mapping[str, Any]] = None) -> None:
+        self.gauge(name, labels=labels).set(v)
 
-    def observe(self, name: str, v: float) -> None:
-        self.histogram(name).observe(v)
+    def observe(self, name: str, v: float,
+                labels: Optional[Mapping[str, Any]] = None) -> None:
+        self.histogram(name, labels=labels).observe(v)
 
-    def value(self, name: str) -> float:
+    def value(self, name: str,
+              labels: Optional[Mapping[str, Any]] = None) -> float:
         """Current counter value (0 when never incremented)."""
-        c = self._counters.get(name)
+        c = self._counters.get(labeled_key(name, labels))
         return c.value if c is not None else 0
 
     def snapshot(self) -> dict:

@@ -1,11 +1,16 @@
 # SparkSQL-analog relational substrate: columnar tables over JAX arrays,
 # the fluent lazy Relation frontend compiled through a canonical plan
 # IR, logical plans, Catalyst-like local optimization, cardinality
-# stats, eager per-operator SPMD execution, the MQO integration, and
-# the online QueryService front-end (continuous submission +
-# micro-batch MQO windows).
+# stats, eager per-operator SPMD execution, the MQO integration, the
+# online QueryService front-end (continuous submission + micro-batch
+# MQO windows), and the asyncio serving front (background window
+# closer, adaptive windows, per-tenant admission control).
 from . import expr, logical
 from .api import ColExpr, Pred, Relation, as_expr, c, col
+from .async_service import (AdaptiveWindowPolicy, AdmissionController,
+                            AdmissionError, AsyncConfig,
+                            AsyncQueryHandle, AsyncQueryService,
+                            TenantQuota, WindowParams)
 from .canonical import (FALSE, canonicalize_expr, canonicalize_plan,
                         format_plan)
 from .datagen import (generate_columns, make_storage, people_schema,
@@ -26,6 +31,6 @@ from .rules import optimize_single
 from .schema import F32, I32, I64, STR, ColType, Schema, Table, next_pow2
 from .service import (ExecutionConfig, MemoryConfig, MqoConfig,
                       QueryError, QueryHandle, QueryService,
-                      ResilienceConfig, SessionConfig)
+                      ResilienceConfig, SessionConfig, WindowState)
 from .stats import (RelationalCostModel, StatsRegistry, build_table_stats,
                     required_columns, selectivity)

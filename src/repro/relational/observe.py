@@ -237,11 +237,43 @@ def _pool_view(stats: dict) -> dict:
     return {**stats, "hit_rate": hits / max(hits + misses, 1)}
 
 
+_TENANT_COUNTERS = (
+    "queries.submitted", "queries.succeeded", "queries.failed",
+    "admission.admitted", "admission.queued", "admission.rejected",
+)
+
+
+def _tenant_sections(session, reg) -> dict:
+    """Per-tenant occupancy + outcome + latency views (PR 10), built
+    from the registry's labeled children (``...{tenant=...}``) and the
+    memory manager's live owner attribution."""
+    tenants: Dict[str, Dict[str, Any]] = {}
+    mm = getattr(session, "memory", None)
+    if mm is not None and hasattr(mm, "owner_usage"):
+        for owner, by_pool in mm.owner_usage().items():
+            t = tenants.setdefault(owner, {})
+            t["pool_bytes"] = dict(by_pool)
+            t["bytes_total"] = sum(by_pool.values())
+    for base in _TENANT_COUNTERS:
+        for labels, _key in reg.series(base):
+            ten = labels.get("tenant")
+            if ten is not None:
+                tenants.setdefault(ten, {})[base] = reg.value(
+                    base, labels=labels)
+    for labels, key in reg.series("latency.tenant"):
+        ten = labels.get("tenant")
+        h = reg._histograms.get(key)
+        if ten is not None and h is not None:
+            tenants.setdefault(ten, {})["latency"] = h.as_dict()
+    return tenants
+
+
 def build_metrics_report(session) -> dict:
     """Everything observable about one session, in one dict: the
     registry snapshot, per-template-family latency percentiles, pool
-    occupancy + hit rates per tier, fault-injector telemetry, and the
-    cost model's predicted-vs-actual calibration table."""
+    occupancy + hit rates per tier, per-tenant occupancy/latency
+    sections, fault-injector telemetry, and the cost model's
+    predicted-vs-actual calibration table."""
     tel: Telemetry = session.telemetry()
     snap = tel.registry.snapshot()
     latency = {"all": None, "families": {}}
@@ -262,6 +294,7 @@ def build_metrics_report(session) -> dict:
             "arrival.interval_s", {"value": 0.0, "n": 0}),
         "pools": pools,
         "memory": {k: v for k, v in mem.items() if k != "pools"},
+        "tenants": _tenant_sections(session, tel.registry),
         "faults": injector.report() if injector is not None else None,
         "calibration": calibration,
     }

@@ -1438,11 +1438,19 @@ def _prepare_group(members, ctx: ExecContext):
     # predicate columns come from the FIRST member's child — same leaf,
     # same device buffers (scan cache), so no member pays a second scan
     cols = tuple(base.columns[n] for n in names)
-    ic, fc = pack_consts([m.ivals for m in members],
-                         [m.fvals for m in members])
+    # pad the member dimension to a power of two so realized group
+    # sizes bucket into few compile shapes (a serving window closes
+    # with whatever arrived — without padding every distinct size
+    # recompiles the batch kernel).  Padded rows duplicate member 0's
+    # literals; their mask/count rows are never read, and real members'
+    # rows are computed independently of them (bit-identical).
+    n_pad = next_pow2(len(members))
+    fill = [members[0]] * (n_pad - len(members))
+    ic, fc = pack_consts([m.ivals for m in members + fill],
+                         [m.fvals for m in members + fill])
     block = min(2048, base.capacity)
     use_pallas = ctx.use_pallas_filter
-    key = ("slotmask", members[0].program, names, len(members),
+    key = ("slotmask", members[0].program, names, n_pad,
            base.capacity, block, use_pallas)
     fn = _shape_cached(ctx, key, lambda: partial(
         filter_mask_batch, block=block, use_pallas=use_pallas))

@@ -12,14 +12,20 @@ module is that front-end:
     h.explain()                   # chosen plan, matched CE/SE, reuse
 
 **Window lifecycle.**  The first ``submit`` after a flush opens a
-window.  The window *closes* (runs the MQO over its queries, executes,
+window (state held in one :class:`WindowState`, shared with the async
+front).  The window *closes* (runs the MQO over its queries, executes,
 and resolves every handle, in submission order) when any of:
 
   * it holds ``max_batch`` queries (count trigger, closes inside the
     submitting call);
   * ``max_wait_s`` has elapsed since the window opened — checked on
-    every ``submit``/``poll``/``result`` (the service is cooperative:
-    no background threads, so a deadline fires at the next call);
+    every ``submit``/``poll``/``result`` (this sync front is
+    cooperative: no background threads, so a deadline fires at the
+    next call — ``result()`` on ANY handle, even an already-resolved
+    one, runs the check, so an expired window is never stranded until
+    the next unrelated ``submit``.  The async front retires the caveat
+    entirely: its background closer task fires deadlines with no
+    caller in flight — see ``relational.async_service``);
   * ``flush()`` is called explicitly, or ``result()`` is called on a
     handle still sitting in the open window.
 
@@ -49,6 +55,7 @@ from __future__ import annotations
 
 import time
 import warnings
+from contextlib import nullcontext
 from dataclasses import dataclass, field, replace
 from typing import Any, Dict, List, Optional, Sequence, Set
 
@@ -254,6 +261,75 @@ class SessionConfig:
 
 
 # ---------------------------------------------------------------------------
+# window state
+# ---------------------------------------------------------------------------
+class WindowState:
+    """One accumulating micro-batch window: the handles plus the
+    *effective* close triggers for THIS window.
+
+    Factored out of ``QueryService`` (PR 10) so the sync and async
+    fronts share one lifecycle: both accumulate into a WindowState and
+    hand the detached handle list to ``QueryService._run_window`` — the
+    single execution path, so the two fronts are bit-identical on the
+    same plan set.  The per-window ``max_batch`` / ``max_wait_s`` make
+    adaptive windowing possible: the async policy sets them at open
+    time from the arrival-rate EWMAs instead of fixed service knobs."""
+
+    __slots__ = ("handles", "opened_at", "max_batch", "max_wait_s")
+
+    def __init__(self):
+        self.handles: List[QueryHandle] = []
+        self.opened_at: Optional[float] = None
+        self.max_batch: int = 1
+        self.max_wait_s: Optional[float] = None
+
+    @property
+    def empty(self) -> bool:
+        return not self.handles
+
+    @property
+    def size(self) -> int:
+        return len(self.handles)
+
+    def open(self, now: float, max_batch: int,
+             max_wait_s: Optional[float]) -> None:
+        """Arm the window for its first arrival with this window's
+        effective close triggers."""
+        assert not self.handles, "window already open"
+        self.opened_at = now
+        self.max_batch = max(1, int(max_batch))
+        self.max_wait_s = max_wait_s
+
+    def append(self, handle: "QueryHandle") -> None:
+        self.handles.append(handle)
+
+    def contains(self, handle: "QueryHandle") -> bool:
+        return any(h is handle for h in self.handles)
+
+    def full(self) -> bool:
+        return len(self.handles) >= self.max_batch
+
+    def due(self, now: float) -> bool:
+        """True when the deadline trigger should close the window."""
+        return (bool(self.handles) and self.max_wait_s is not None
+                and now - self.opened_at >= self.max_wait_s)
+
+    def deadline(self) -> Optional[float]:
+        """Absolute clock time of the deadline trigger (None when the
+        window is empty or has no wait bound) — what the async closer
+        task sleeps until."""
+        if not self.handles or self.max_wait_s is None:
+            return None
+        return self.opened_at + self.max_wait_s
+
+    def detach(self) -> List["QueryHandle"]:
+        """Close the window: take the handles, reset to empty."""
+        handles, self.handles = self.handles, []
+        self.opened_at = None
+        return handles
+
+
+# ---------------------------------------------------------------------------
 # lazy handles
 # ---------------------------------------------------------------------------
 @dataclass
@@ -286,17 +362,19 @@ class QueryHandle:
     Node — provenance for ``explain()``); ``node`` is the underlying
     logical tree the window optimizes."""
 
-    __slots__ = ("plan", "node", "hint_cache", "seq", "_service",
-                 "_query_result", "_explain", "_done", "_error",
-                 "_t_submit", "_family")
+    __slots__ = ("plan", "node", "hint_cache", "seq", "tenant",
+                 "_service", "_query_result", "_explain", "_done",
+                 "_error", "_t_submit", "_family")
 
     def __init__(self, service: "QueryService", plan, seq: int, *,
-                 node: Optional[L.Node] = None, hint_cache: bool = False):
+                 node: Optional[L.Node] = None, hint_cache: bool = False,
+                 tenant: Optional[str] = None):
         self._service = service
         self.plan = plan
         self.node = node if node is not None else L.as_node(plan)
         self.hint_cache = hint_cache
         self.seq = seq                  # submission order, service-wide
+        self.tenant = tenant            # quota / attribution key (PR 10)
         self._query_result = None
         self._explain = None
         self._done = False
@@ -323,8 +401,15 @@ class QueryHandle:
     def result(self):
         """The query's output Table, forcing the window closed if this
         handle is still sitting in it (laziness must not deadlock).
-        A failed query re-raises the exception that killed it."""
-        if not self._done:
+        A failed query re-raises the exception that killed it.
+
+        Awaiting ANY handle also drives the cooperative deadline clock
+        (PR 10 staleness fix): a different window whose ``max_wait_s``
+        has expired closes here too, instead of sitting stranded until
+        the next unrelated ``submit``."""
+        if self._done:
+            self._service.flush_expired()
+        else:
             self._service._force(self)
         if not self._done:
             raise RuntimeError("handle was not resolved by its window")
@@ -415,8 +500,7 @@ class QueryService:
                                  else bool(locally_optimize))
         self.budget_bytes = budget_bytes
         self._clock = clock
-        self._pending: List[QueryHandle] = []
-        self._opened_at: Optional[float] = None
+        self._window = WindowState()
         self._n_windows = 0
         self._n_submitted = 0
         self._last_submit: Optional[float] = None   # inter-arrival EWMA
@@ -441,11 +525,13 @@ class QueryService:
         return NOOP_SPAN
 
     # -- submission ----------------------------------------------------------
-    def submit(self, plan) -> QueryHandle:
+    def submit(self, plan, *, tenant: Optional[str] = None) -> QueryHandle:
         """Add one query to the open window (opening one if needed).
 
         ``plan`` is a :class:`~repro.relational.api.Relation` (raw
         ``logical.Node`` trees remain a deprecated compat shim).
+        ``tenant`` labels the query for per-tenant metrics and pool-byte
+        attribution (quota *enforcement* lives in the async front).
         Returns immediately with a lazy :class:`QueryHandle`.  If the
         previous window's deadline has passed, it is flushed first (its
         queries were due); if this arrival fills the window to
@@ -454,24 +540,36 @@ class QueryService:
         self.flush_expired()
         node, hint = _coerce_submission(plan, "QueryService.submit")
         handle = QueryHandle(self, plan, self._n_submitted, node=node,
-                             hint_cache=hint)
+                             hint_cache=hint, tenant=tenant)
+        now = self._note_submit(handle)
+        with self._span("submit", seq=handle.seq):
+            if self._window.empty:
+                self._window.open(now, self.max_batch, self.max_wait_s)
+            self._window.append(handle)
+            if self._window.full():
+                self.flush()
+        return handle
+
+    def _note_submit(self, handle: QueryHandle) -> float:
+        """Shared submission bookkeeping (sync front and async front):
+        stamp the handle's submit time, advance the submission counter,
+        and record the arrival telemetry — ``queries.submitted`` (plus
+        the per-tenant labeled child) and the inter-arrival EWMA the
+        adaptive window policy feeds on.  Returns the clock reading."""
         now = self._clock()
         handle._t_submit = now
         tel = getattr(self.session, "_telemetry", None)
         if tel is not None:
             tel.registry.inc("queries.submitted")
+            if handle.tenant is not None:
+                tel.registry.inc("queries.submitted",
+                                 labels={"tenant": handle.tenant})
             if self._last_submit is not None:
                 tel.registry.ewma("arrival.interval_s").observe(
                     now - self._last_submit)
             self._last_submit = now
         self._n_submitted += 1
-        with self._span("submit", seq=handle.seq):
-            if not self._pending:
-                self._opened_at = now
-            self._pending.append(handle)
-            if len(self._pending) >= self.max_batch:
-                self.flush()
-        return handle
+        return now
 
     def poll(self) -> bool:
         """Deadline check: closes the open window if ``max_wait_s`` has
@@ -487,20 +585,18 @@ class QueryService:
         the closed window's BatchResult, or None when no window was
         due (no deadline configured, nothing pending, or still within
         ``max_wait_s``)."""
-        if (self._pending and self.max_wait_s is not None
-                and self._clock() - self._opened_at >= self.max_wait_s):
+        if self._window.due(self._clock()):
             return self.flush()
         return None
 
     @property
     def pending(self) -> int:
-        return len(self._pending)
+        return self._window.size
 
     def flush(self):
         """Close the open window now; resolves its handles.  Returns
         the window's BatchResult, or None when nothing was pending."""
-        handles, self._pending = self._pending, []
-        self._opened_at = None
+        handles = self._window.detach()
         if not handles:
             return None
         return self._run_window(handles)
@@ -537,8 +633,19 @@ class QueryService:
     # -- internals -----------------------------------------------------------
     def _force(self, handle: QueryHandle) -> None:
         self.flush_expired()
-        if not handle._done and any(h is handle for h in self._pending):
+        if not handle._done and self._window.contains(handle):
             self.flush()
+
+    def _family_of(self, node: L.Node) -> str:
+        """Loose-ψ template family of one submission, computed exactly
+        as ``_run_window_inner`` will (canonicalize, optionally locally
+        optimize, loose fingerprint) — the async front's adaptive
+        policy keys its arrival-rate EWMAs on this BEFORE the window
+        runs."""
+        p = canonicalize_plan(node)
+        if self.locally_optimize:
+            p = canonicalize_plan(optimize_single(p))
+        return fingerprint(p).hex()[:12]
 
     def _run_window(self, handles: List[QueryHandle], *,
                     mqo: Optional[bool] = None,
@@ -815,15 +922,23 @@ class QueryService:
         with self._span("execute", window=window,
                         n_live=len(live)) as xsp:
             if getattr(sess, "window_batch", True) and len(live) >= 2:
-                batched_done, shared_dispatch = self._exec_batched(
-                    sess, ctx, live, executed, results, events)
+                # the batched dispatch serves several queries at once;
+                # attribute its admissions to the first live tenant
+                # (first-toucher pays — same rule as shared CEs below)
+                first_tenant = next(
+                    (handles[i].tenant for i in live
+                     if handles[i].tenant is not None), None)
+                with _owning(sess, first_tenant):
+                    batched_done, shared_dispatch = self._exec_batched(
+                        sess, ctx, live, executed, results, events)
             xsp.set(n_batched=len(batched_done))
             for i in live:
                 if i in batched_done:
                     continue
                 try:
-                    results[i] = sess.run_one_resilient(
-                        executed[i], ctx, query=i, events=events[i])
+                    with _owning(sess, handles[i].tenant):
+                        results[i] = sess.run_one_resilient(
+                            executed[i], ctx, query=i, events=events[i])
                 except CEMaterializationError as exc:
                     # a shared CE is poisoned: rerun THIS consumer on
                     # its unshared residual plan (the pre-rewrite
@@ -835,8 +950,9 @@ class QueryService:
                         action="fallback", level="residual",
                         error=repr(exc)))
                     try:
-                        results[i] = sess.run_one_resilient(
-                            plans[i], ctx, query=i, events=events[i])
+                        with _owning(sess, handles[i].tenant):
+                            results[i] = sess.run_one_resilient(
+                                plans[i], ctx, query=i, events=events[i])
                         executed[i] = plans[i]
                     except Exception as exc2:
                         if not isolate:
@@ -977,11 +1093,16 @@ class QueryService:
                 continue
             failed = i in errors or qr is None
             if tel is not None:
-                tel.registry.inc("queries.failed" if failed
-                                 else "queries.succeeded")
+                outcome = "queries.failed" if failed else "queries.succeeded"
+                tel.registry.inc(outcome)
+                if h.tenant is not None:
+                    tel.registry.inc(outcome, labels={"tenant": h.tenant})
                 if h._t_submit is not None:
                     lat = max(now - h._t_submit, 0.0)
                     tel.registry.observe("latency.all", lat)
+                    if h.tenant is not None:
+                        tel.registry.observe("latency.tenant", lat,
+                                             labels={"tenant": h.tenant})
                     if h._family:
                         tel.registry.observe(
                             f"latency.family.{h._family}", lat)
@@ -1036,6 +1157,9 @@ class QueryService:
                 continue
             if tel is not None:
                 tel.registry.inc("queries.failed")
+                if h.tenant is not None:
+                    tel.registry.inc("queries.failed",
+                                     labels={"tenant": h.tenant})
             try:
                 submitted = L.explain(h.node)
             except Exception:
@@ -1141,6 +1265,15 @@ class _LazyExplain:
             shared_dispatch=(list(self.shared_dispatch)
                              if self.shared_dispatch else None),
         )
+
+
+def _owning(sess, tenant: Optional[str]):
+    """Scope ``sess.memory`` admissions to ``tenant`` (no-op context
+    when the session has no attribution-capable manager)."""
+    mm = getattr(sess, "memory", None)
+    if mm is None or not hasattr(mm, "owning"):
+        return nullcontext()
+    return mm.owning(tenant)
 
 
 def _subsumption_plan(plan: L.Node, strict: bytes, meta,

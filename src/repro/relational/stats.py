@@ -98,11 +98,18 @@ class StatsRegistry:
         self.tables: Dict[str, TableStats] = {}
         self.columns: Dict[str, ColumnStats] = {}
         self.partitions: Dict[str, PartitionInfo] = {}
+        # selectivity memo keyed by predicate identity (the entry keeps
+        # a strong ref, so the id stays valid).  A window prices the
+        # SAME shared covering predicate once per member — per-window
+        # cost was quadratic in batch size without this.  Any stats
+        # (re-)registration invalidates.
+        self._sel_memo: Dict[int, Tuple[E.Expr, float]] = {}
 
     def register(self, table: str, stats: TableStats,
                  partitions: Optional[PartitionInfo] = None):
         self.tables[table] = stats
         self.columns.update(stats.columns)
+        self._sel_memo.clear()
         # re-registration must REPLACE partition metadata, including
         # dropping it when the new registration is unpartitioned —
         # stale per-partition statistics would mis-prune the new data
@@ -164,6 +171,20 @@ def _range_fraction(cs: ColumnStats, op: str, v: float) -> float:
 
 
 def selectivity(e: E.Expr, reg: StatsRegistry) -> float:
+    memo = getattr(reg, "_sel_memo", None)
+    if memo is not None:
+        hit = memo.get(id(e))
+        if hit is not None and hit[0] is e:
+            return hit[1]
+    s = _selectivity(e, reg)
+    if memo is not None and not isinstance(e, E.TrueExpr):
+        if len(memo) > 8192:      # serving streams see fresh predicates
+            memo.clear()          # forever; bound the strong refs
+        memo[id(e)] = (e, s)
+    return s
+
+
+def _selectivity(e: E.Expr, reg: StatsRegistry) -> float:
     if isinstance(e, E.TrueExpr):
         return 1.0
     if isinstance(e, E.Cmp):

@@ -678,9 +678,13 @@ class TestSoak:
         n_ok, n_failed, sess = _run_soak(FAULT_SEED, 100)
         inj = sess.fault_injector
         assert inj.n_fired > 0, "soak never injected a fault"
-        # every named failure point was actually reached on the hot
-        # path (whether a given point FIRES depends on the seed)
+        # every named failure point on the SYNC hot path was actually
+        # reached (whether a given point FIRES depends on the seed);
+        # async_close lives in the async front's closer task — its soak
+        # is tests/test_async_service.py
         for point in FAULT_POINTS:
+            if point == "async_close":
+                continue
             assert inj.invocations(point) > 0, point
         assert n_ok > 0, "soak never completed a query"
         # PR 9: the metrics registry mirrors the injector and the
